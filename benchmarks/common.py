@@ -1,0 +1,35 @@
+"""Shared benchmark plumbing: result dirs, markdown tables, timers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+
+def save_result(name: str, payload: dict, out_dir: str | None = None):
+    d = out_dir or RESULTS_DIR
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def md_table(rows: list[dict], cols: list[str] | None = None) -> str:
+    if not rows:
+        return "(no rows)"
+    cols = cols or list(rows[0])
+    head = "| " + " | ".join(cols) + " |"
+    sep = "|" + "|".join("---" for _ in cols) + "|"
+    body = ["| " + " | ".join(str(r.get(c, "")) for c in cols) + " |"
+            for r in rows]
+    return "\n".join([head, sep] + body)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,86 @@
+"""Render the §Roofline table from the dry-run records.
+
+Reads results/dryrun/*.json (written by launch/dryrun.py) and emits the
+per-(arch x shape x mesh) roofline terms, dominant bottleneck, and
+MODEL_FLOPS / HLO_FLOPs utilization ratio — the §Roofline deliverable.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import md_table, save_result
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "results/dryrun")
+
+
+def load_records(dryrun_dir: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir or DRYRUN_DIR,
+                                              "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows_from(recs: list[dict], mesh: str = "16x16",
+              variant: str = "base") -> list[dict]:
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("variant", "base") != variant:
+            continue
+        if r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "skipped (" + r["why"][:40] + "...)"})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "ERROR"})
+            continue
+        if "roofline" not in r:        # e2c-sim sweep cells: cost only
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "ok (sim cell — see §Dry-run)"})
+            continue
+        rl = r["roofline"]
+        terms = {"compute": rl["t_compute_s"], "memory": rl["t_memory_s"],
+                 "collective": rl["t_collective_s"]}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        frac = terms["compute"] / bound if bound > 0 else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute_s": f"{terms['compute']:.3f}",
+            "t_memory_s": f"{terms['memory']:.3f}",
+            "t_collective_s": f"{terms['collective']:.3f}",
+            "bottleneck": dom,
+            "roofline_frac": f"{frac:.3f}",
+            "useful_flops": r.get("useful_flops_ratio"),
+            "mem_gb": r.get("memory", {}).get("total_gb"),
+        })
+    return rows
+
+
+def run(out_dir=None, dryrun_dir=None) -> dict:
+    recs = load_records(dryrun_dir)
+    out = {}
+    for mesh in ("16x16", "2x16x16"):
+        rows = rows_from(recs, mesh)
+        out[mesh] = rows
+        if rows:
+            print(f"\n## roofline — mesh {mesh} ({len(rows)} cells)")
+            print(md_table(rows))
+    ok = sum(1 for m in out.values() for r in m if r.get("status") == "ok")
+    skipped = sum(1 for m in out.values() for r in m
+                  if "skipped" in str(r.get("status")))
+    err = sum(1 for m in out.values() for r in m
+              if r.get("status") == "ERROR")
+    payload = {"tables": out,
+               "summary": {"ok": ok, "skipped": skipped, "errors": err}}
+    save_result("roofline", payload, out_dir)
+    print(f"\nroofline summary: {payload['summary']}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs one harness per paper table/claim (see DESIGN.md §9) plus the
+roofline readers over whatever dry-run records exist, and writes JSON
+artifacts to results/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main(argv=None):
+    t0 = time.perf_counter()
+    from benchmarks import (bench_energy, bench_engine, bench_kernels,
+                            bench_policies, eet_from_roofline, roofline)
+    mods = [("bench_policies", bench_policies),
+            ("bench_energy", bench_energy),
+            ("bench_engine", bench_engine),
+            ("bench_kernels", bench_kernels),
+            ("roofline", roofline),
+            ("eet_from_roofline", eet_from_roofline)]
+    if argv:
+        mods = [(n, m) for n, m in mods if n in argv]
+    failures = []
+    all_checks: dict[str, bool] = {}
+    for name, mod in mods:
+        print(f"\n{'='*70}\n# {name}\n{'='*70}")
+        try:
+            payload = mod.run()
+            for k, v in (payload.get("checks") or {}).items():
+                all_checks[f"{name}.{k}"] = v
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\n{'='*70}\n# summary ({time.perf_counter()-t0:.1f}s)")
+    for k, v in sorted(all_checks.items()):
+        print(f"  {'PASS' if v else 'FAIL'}  {k}")
+    if failures:
+        print("harness failures:", failures)
+        sys.exit(1)
+    bad = [k for k, v in all_checks.items() if not v]
+    if bad:
+        print("failed checks:", bad)
+        sys.exit(2)
+    print("all benchmark checks passed")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

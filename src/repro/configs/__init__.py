@@ -1,0 +1,6 @@
+from repro.configs.base import (SHAPES, ArchConfig, MoEConfig, ShapeConfig,
+                                cell_is_runnable, get_arch, list_archs,
+                                register_arch)
+
+__all__ = ["SHAPES", "ArchConfig", "MoEConfig", "ShapeConfig",
+           "cell_is_runnable", "get_arch", "list_archs", "register_arch"]

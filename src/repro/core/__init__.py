@@ -1,0 +1,31 @@
+"""E2C core: the paper's simulator, vectorized in JAX.
+
+Public API:
+    simulate(workload, eet, power, machine_types, policy, ...)  -> SimState
+    run_sim / run_sweep          jit-able engine entry points
+    metrics / ascii_gantt        reports (headless GUI replacement)
+    SCHEDULERS / register_policy pluggable scheduling methods
+    EETTable / load_eet_csv / synth_eet, workload generators
+"""
+from repro.core.eet import (EETTable, default_power, eet_from_roofline,
+                            homogeneous_eet, load_eet_csv, save_eet_csv,
+                            synth_eet)
+from repro.core.energy import total_energy
+from repro.core.engine import (SimParams, make_tables, run_sim, run_sweep,
+                               simulate)
+from repro.core.report import SimReport, ascii_gantt, format_report, metrics
+from repro.core.schedulers import (BATCH_POLICIES, POLICY_IDS, POLICY_NAMES,
+                                   SCHEDULERS, register_policy)
+from repro.core.workload import (Workload, bursty_workload, load_workload_csv,
+                                 poisson_workload, save_workload_csv,
+                                 uniform_workload)
+
+__all__ = [
+    "EETTable", "default_power", "eet_from_roofline", "homogeneous_eet",
+    "load_eet_csv", "save_eet_csv", "synth_eet", "total_energy", "SimParams",
+    "make_tables", "run_sim", "run_sweep", "simulate", "SimReport",
+    "ascii_gantt", "format_report", "metrics", "BATCH_POLICIES", "POLICY_IDS",
+    "POLICY_NAMES", "SCHEDULERS", "register_policy", "Workload",
+    "bursty_workload", "load_workload_csv", "poisson_workload",
+    "save_workload_csv", "uniform_workload",
+]

@@ -1,0 +1,288 @@
+"""The E2C discrete-event engine, vectorized in JAX.
+
+One simulation replica is a ``lax.while_loop`` whose body processes exactly
+one event timestamp: retire completions, admit arrivals, drop deadline
+misses, run the scheduler drain loop, start queued work on idle machines.
+All queue mutations are masked vector updates over the fixed-shape state in
+``core/state.py`` — no host round-trips, so replicas compose under ``vmap``
+(Monte-Carlo sweeps over workloads / policies / EET draws) and shard under
+``pjit`` across a pod (see launch/sim.py).
+
+Event ordering within a timestamp `t` (matches the E2C loop):
+  1. completions  (``busy_until <= t``; finishing exactly at the deadline
+     counts as completed),
+  2. arrivals     (``arrival <= t`` -> batch queue, overflow -> cancelled),
+  3. deadline drops (queued -> MISSED_QUEUE, running -> MISSED_RUNNING and
+     the machine is freed; partial energy is charged),
+  4. scheduler drain (policy picks (task, machine) pairs until no room / no
+     tasks; cancellation wrapper may send tasks to the cancelled pool),
+  5. start tasks on idle machines (lowest mapping-sequence first — FIFO
+     within a machine queue, E2C's sequential execution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedulers as P
+from repro.core import state as S
+from repro.core.eet import EETTable
+from repro.core.workload import Workload
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+class SimParams(NamedTuple):
+    """Static (compile-time) simulation parameters."""
+    lcap: int = 4                 # machine-queue size (paper Fig. 3 option)
+    qcap: int = 1 << 30           # batch-queue capacity
+    cancel_infeasible: bool = True
+    max_events: int | None = None
+
+
+# --------------------------------------------------------------------------
+# Event phases
+# --------------------------------------------------------------------------
+def _completions(st: S.SimState, tb: S.StaticTables) -> S.SimState:
+    mach, tasks = st.machines, st.tasks
+    n = tasks.arrival.shape[0]
+    done_m = (mach.running >= 0) & (mach.busy_until <= st.time)
+    tid = jnp.where(done_m, mach.running, n)          # n = dropped by scatter
+    dur = mach.busy_until - tasks.t_start[jnp.clip(mach.running, 0, n - 1)]
+    dur = jnp.where(done_m, dur, 0.0)
+    p_active = tb.power[mach.mtype, 1]
+
+    tasks = replace(
+        tasks,
+        status=tasks.status.at[tid].set(S.COMPLETED, mode="drop"),
+        t_end=tasks.t_end.at[tid].set(
+            jnp.where(done_m, mach.busy_until, 0.0), mode="drop"),
+    )
+    mach = replace(
+        mach,
+        energy=mach.energy + p_active * dur,
+        active_time=mach.active_time + dur,
+        running=jnp.where(done_m, -1, mach.running),
+    )
+    return replace(st, tasks=tasks, machines=mach)
+
+
+def _arrivals(st: S.SimState, qcap: int) -> S.SimState:
+    tasks = st.tasks
+    new = (tasks.status == S.NOT_ARRIVED) & (tasks.arrival <= st.time)
+    in_batch = jnp.sum(tasks.status == S.IN_BATCH)
+    pos = jnp.cumsum(new.astype(jnp.int32))           # 1-based admission rank
+    admitted = new & (in_batch + pos <= qcap)
+    overflow = new & ~admitted
+    status = jnp.where(admitted, S.IN_BATCH, tasks.status)
+    status = jnp.where(overflow, S.CANCELLED, status)
+    t_end = jnp.where(overflow, tasks.arrival, tasks.t_end)
+    return replace(st, tasks=replace(tasks, status=status, t_end=t_end))
+
+
+def _deadline_drops(st: S.SimState, tb: S.StaticTables) -> S.SimState:
+    tasks, mach = st.tasks, st.machines
+    n = tasks.arrival.shape[0]
+    n_m = mach.mtype.shape[0]
+    # queued tasks (batch queue or machine queue) past deadline
+    waiting = (tasks.status == S.IN_BATCH) | (tasks.status == S.IN_MQ)
+    miss_q = waiting & (tasks.deadline <= st.time)
+    # machine-queue departures decrement the incremental counts
+    from_mq = miss_q & (tasks.status == S.IN_MQ)
+    mq_count = st.mq_count - jnp.zeros((n_m,), jnp.int32).at[
+        jnp.where(from_mq, tasks.machine, n_m)].add(1, mode="drop")
+    st = replace(st, mq_count=mq_count)
+    status = jnp.where(miss_q, S.MISSED_QUEUE, tasks.status)
+    t_end = jnp.where(miss_q, tasks.deadline, tasks.t_end)
+
+    # running tasks past deadline: drop from the machine, charge partial energy
+    run_id = jnp.clip(mach.running, 0, n - 1)
+    run_dl = tasks.deadline[run_id]
+    miss_r = (mach.running >= 0) & (run_dl <= st.time)
+    tid = jnp.where(miss_r, mach.running, n)
+    dur = jnp.where(miss_r, run_dl - tasks.t_start[run_id], 0.0)
+    status = status.at[tid].set(S.MISSED_RUNNING, mode="drop")
+    t_end = t_end.at[tid].set(jnp.where(miss_r, run_dl, 0.0), mode="drop")
+    p_active = tb.power[mach.mtype, 1]
+    mach = replace(
+        mach,
+        energy=mach.energy + p_active * dur,
+        active_time=mach.active_time + dur,
+        running=jnp.where(miss_r, -1, mach.running),
+    )
+    return replace(st, tasks=replace(tasks, status=status, t_end=t_end),
+                   machines=mach)
+
+
+def _apply_decision(st: S.SimState, dec: P.Decision) -> S.SimState:
+    tasks = st.tasks
+    n = tasks.arrival.shape[0]
+    do_map = (dec.task >= 0) & ~dec.cancel
+    do_cancel = (dec.task >= 0) & dec.cancel
+    tid_map = jnp.where(do_map, dec.task, n)
+    tid_cxl = jnp.where(do_cancel, dec.task, n)
+    tasks = replace(
+        tasks,
+        status=tasks.status.at[tid_map].set(S.IN_MQ, mode="drop")
+                           .at[tid_cxl].set(S.CANCELLED, mode="drop"),
+        machine=tasks.machine.at[tid_map].set(dec.machine, mode="drop"),
+        seq=tasks.seq.at[tid_map].set(st.seq_counter, mode="drop"),
+        t_end=tasks.t_end.at[tid_cxl].set(st.time, mode="drop"),
+    )
+    n_m = st.machines.mtype.shape[0]
+    rr_ptr = jnp.where(do_map, (dec.machine + 1) % n_m, st.rr_ptr)
+    mq_count = st.mq_count.at[jnp.where(do_map, dec.machine, n_m)].add(
+        1, mode="drop")
+    return replace(st, tasks=tasks, seq_counter=st.seq_counter +
+                   do_map.astype(jnp.int32), rr_ptr=rr_ptr,
+                   mq_count=mq_count)
+
+
+def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
+           params: SimParams, const: tuple | None = None) -> S.SimState:
+    """Invoke the scheduler until it returns a no-op.
+
+    Each iteration maps or cancels exactly one batch-queue task, so the
+    loop is bounded by the current batch-queue population (tighter than
+    the task count n — fewer worst-case trips per event)."""
+    n = st.tasks.arrival.shape[0]
+    bound = jnp.sum(st.tasks.status == S.IN_BATCH).astype(jnp.int32)
+
+    def cond(c):
+        _, cont, iters = c
+        return cont & (iters < bound)
+
+    def body(c):
+        s, _, iters = c
+        dec = P.dispatch(policy_id, s, tb, params.lcap,
+                         params.cancel_infeasible, const)
+        s = _apply_decision(s, dec)
+        return s, dec.task >= 0, iters + 1
+
+    st, _, _ = jax.lax.while_loop(cond, body, (st, jnp.bool_(True),
+                                               jnp.int32(0)))
+    return st
+
+
+def _start_tasks(st: S.SimState, tb: S.StaticTables) -> S.SimState:
+    tasks, mach = st.tasks, st.machines
+    n = tasks.arrival.shape[0]
+    n_m = mach.mtype.shape[0]
+    idle = mach.running < 0
+    # (N, M) queued mask; pick the lowest mapping-seq task per idle machine
+    queued = (tasks.status == S.IN_MQ)[:, None] & (
+        tasks.machine[:, None] == jnp.arange(n_m)[None, :])
+    seqs = jnp.where(queued, tasks.seq[:, None], INT_MAX)
+    pick = jnp.argmin(seqs, axis=0).astype(jnp.int32)        # (M,)
+    has = queued.any(axis=0)
+    start = idle & has
+    tid = jnp.where(start, pick, n)
+    dur = S.exec_time(tb, tasks, jnp.clip(pick, 0, n - 1), mach.mtype)
+    tasks = replace(
+        tasks,
+        status=tasks.status.at[tid].set(S.RUNNING, mode="drop"),
+        t_start=tasks.t_start.at[tid].set(st.time, mode="drop"),
+    )
+    mach = replace(
+        mach,
+        running=jnp.where(start, pick, mach.running),
+        busy_until=jnp.where(start, st.time + dur, mach.busy_until),
+    )
+    mq_count = st.mq_count - start.astype(jnp.int32)
+    return replace(st, tasks=tasks, machines=mach, mq_count=mq_count)
+
+
+def _next_event_time(st: S.SimState) -> jnp.ndarray:
+    tasks, mach = st.tasks, st.machines
+    t_arr = jnp.min(jnp.where(tasks.status == S.NOT_ARRIVED,
+                              tasks.arrival, S.INF))
+    t_cmp = jnp.min(jnp.where(mach.running >= 0, mach.busy_until, S.INF))
+    live = (tasks.status == S.IN_BATCH) | (tasks.status == S.IN_MQ) | (
+        tasks.status == S.RUNNING)
+    t_dl = jnp.min(jnp.where(live, tasks.deadline, S.INF))
+    return jnp.minimum(jnp.minimum(t_arr, t_cmp), t_dl)
+
+
+# --------------------------------------------------------------------------
+# Top-level engine
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("params",))
+def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
+            policy_id: jnp.ndarray, params: SimParams = SimParams()
+            ) -> S.SimState:
+    """Run one simulation replica to completion; returns the final state.
+
+    All array arguments may carry leading batch dims via ``vmap`` (see
+    ``run_sweep``).  ``params`` is static.
+    """
+    st = S.init_state(tasks, mtype)
+    n = tasks.arrival.shape[0]
+    max_events = params.max_events or (4 * n + 16)
+    policy_id = jnp.asarray(policy_id, jnp.int32)
+
+    # simulation invariants hoisted out of the event/drain loops: the
+    # (N, M) expected-time and energy matrices never change mid-run
+    eet_nm = tables.eet[tasks.type_id[:, None], mtype[None, :]]
+    energy_nm = eet_nm * tables.power[mtype, 1][None, :]
+    const = (eet_nm, energy_nm)
+
+    def cond(st):
+        done = jnp.all(S.is_terminal(st.tasks.status))
+        return ~done & (st.n_events < max_events)
+
+    def body(st):
+        t = _next_event_time(st)
+        st = replace(st, time=t)
+        st = _completions(st, tables)
+        st = _arrivals(st, params.qcap)
+        st = _deadline_drops(st, tables)
+        st = _drain(st, tables, policy_id, params, const)
+        st = _start_tasks(st, tables)
+        return replace(st, n_events=st.n_events + 1)
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+def make_tables(eet: EETTable | np.ndarray, power: np.ndarray,
+                n_tasks: int, *, noise: np.ndarray | None = None
+                ) -> S.StaticTables:
+    eet_arr = eet.eet if isinstance(eet, EETTable) else np.asarray(eet)
+    if noise is None:
+        noise = np.ones((n_tasks,), np.float32)
+    return S.StaticTables(eet=jnp.asarray(eet_arr, jnp.float32),
+                          power=jnp.asarray(power, jnp.float32),
+                          noise=jnp.asarray(noise, jnp.float32))
+
+
+def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
+             machine_types: np.ndarray | list[int], policy: str = "mct",
+             *, lcap: int = 4, qcap: int | None = None,
+             cancel_infeasible: bool = True,
+             noise: np.ndarray | None = None) -> S.SimState:
+    """Host-friendly wrapper: one replica, named policy."""
+    params = SimParams(lcap=lcap, qcap=qcap or (1 << 30),
+                       cancel_infeasible=cancel_infeasible)
+    tables = make_tables(eet, power, workload.n_tasks, noise=noise)
+    mtype = jnp.asarray(np.asarray(machine_types, np.int32))
+    return run_sim(workload.to_task_table(), mtype, tables,
+                   P.POLICY_IDS[policy], params)
+
+
+def run_sweep(tasks: S.TaskTable, mtype: jnp.ndarray,
+              tables: S.StaticTables, policy_ids: jnp.ndarray,
+              params: SimParams = SimParams()) -> S.SimState:
+    """vmap over leading replica axes of any/all array arguments.
+
+    Arguments that should be shared across replicas must be broadcast by the
+    caller (see ``launch/sim.py`` which also shards the replica axis over the
+    ("pod", "data") mesh axes for pod-scale Monte-Carlo).
+    """
+    def one(tasks, mtype, tables, pid):
+        return run_sim(tasks, mtype, tables, pid, params)
+    return jax.vmap(one)(tasks, mtype, tables, policy_ids)

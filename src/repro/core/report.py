@@ -1,0 +1,149 @@
+"""Simulation outputs: metrics, event tables, ASCII Gantt (the headless
+replacement for the E2C GUI panels — batch queue / machines / cancelled /
+missed task views become columns of one report).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as E
+from repro.core import state as S
+
+STATUS_NAMES = {
+    S.NOT_ARRIVED: "not_arrived",
+    S.IN_BATCH: "in_batch",
+    S.IN_MQ: "in_machine_queue",
+    S.RUNNING: "running",
+    S.COMPLETED: "completed",
+    S.CANCELLED: "cancelled",
+    S.MISSED_QUEUE: "missed_queue",
+    S.MISSED_RUNNING: "missed_running",
+}
+
+
+@dataclass
+class SimReport:
+    n_tasks: int
+    completed: int
+    cancelled: int
+    missed_queue: int
+    missed_running: int
+    makespan: float
+    total_energy: float
+    active_energy: float
+    idle_energy: float
+    mean_response: float       # completion - arrival over completed tasks
+    mean_wait: float           # start - arrival over started tasks
+    throughput: float          # completed / makespan
+    energy_per_task: float
+    machine_util: np.ndarray   # (M,) active_time / makespan
+
+    @property
+    def completion_rate(self) -> float:
+        return self.completed / max(self.n_tasks, 1)
+
+    @property
+    def miss_rate(self) -> float:
+        return (self.missed_queue + self.missed_running) / max(self.n_tasks, 1)
+
+    @property
+    def cancel_rate(self) -> float:
+        return self.cancelled / max(self.n_tasks, 1)
+
+    def row(self) -> dict:
+        return {
+            "completed": self.completed, "cancelled": self.cancelled,
+            "missed": self.missed_queue + self.missed_running,
+            "completion_rate": round(self.completion_rate, 4),
+            "makespan": round(self.makespan, 4),
+            "energy_J": round(self.total_energy, 2),
+            "energy_per_task_J": round(self.energy_per_task, 3),
+            "mean_response_s": round(self.mean_response, 4),
+            "throughput": round(self.throughput, 4),
+        }
+
+
+def metrics(st: S.SimState, tables: S.StaticTables) -> SimReport:
+    """Host-side report from a final SimState (also works on vmapped states
+    via ``jax.tree_util.tree_map(lambda x: x[i], st)``)."""
+    status = np.asarray(st.tasks.status)
+    t_end = np.asarray(st.tasks.t_end)
+    t_start = np.asarray(st.tasks.t_start)
+    arrival = np.asarray(st.tasks.arrival)
+    n = status.shape[0]
+    completed = status == S.COMPLETED
+    started = t_start >= 0
+    span = float(E.makespan(st))
+    active = float(jnp.sum(E.active_energy(st)))
+    idle = float(jnp.sum(E.idle_energy(st, tables)))
+    n_done = int(completed.sum())
+    util = np.asarray(st.machines.active_time) / max(span, 1e-9)
+    return SimReport(
+        n_tasks=n,
+        completed=n_done,
+        cancelled=int((status == S.CANCELLED).sum()),
+        missed_queue=int((status == S.MISSED_QUEUE).sum()),
+        missed_running=int((status == S.MISSED_RUNNING).sum()),
+        makespan=span,
+        total_energy=active + idle,
+        active_energy=active,
+        idle_energy=idle,
+        mean_response=float(np.mean((t_end - arrival)[completed])
+                            ) if n_done else 0.0,
+        mean_wait=float(np.mean((t_start - arrival)[started])
+                        ) if started.any() else 0.0,
+        throughput=n_done / max(span, 1e-9),
+        energy_per_task=(active + idle) / max(n_done, 1),
+        machine_util=util,
+    )
+
+
+def task_table(st: S.SimState) -> list[dict]:
+    """Per-task event log (the GUI's task panels, as rows)."""
+    rows = []
+    for i in range(int(st.tasks.arrival.shape[0])):
+        rows.append({
+            "task": i,
+            "type": int(st.tasks.type_id[i]),
+            "arrival": float(st.tasks.arrival[i]),
+            "deadline": float(st.tasks.deadline[i]),
+            "status": STATUS_NAMES[int(st.tasks.status[i])],
+            "machine": int(st.tasks.machine[i]),
+            "t_start": float(st.tasks.t_start[i]),
+            "t_end": float(st.tasks.t_end[i]),
+        })
+    return rows
+
+
+def ascii_gantt(st: S.SimState, width: int = 72) -> str:
+    """ASCII Gantt chart of machine occupancy (visual aspect, headless)."""
+    span = float(E.makespan(st))
+    if span <= 0:
+        return "(empty schedule)"
+    n_m = int(st.machines.mtype.shape[0])
+    status = np.asarray(st.tasks.status)
+    machine = np.asarray(st.tasks.machine)
+    t0 = np.asarray(st.tasks.t_start)
+    t1 = np.asarray(st.tasks.t_end)
+    lines = [f"gantt 0..{span:.2f}s  ('#'=completed, 'x'=dropped while "
+             f"running)"]
+    for m in range(n_m):
+        row = [" "] * width
+        for i in np.nonzero((machine == m) & (t0 >= 0))[0]:
+            a = int(t0[i] / span * (width - 1))
+            b = max(int(t1[i] / span * (width - 1)), a)
+            ch = "#" if status[i] == S.COMPLETED else "x"
+            for c in range(a, b + 1):
+                row[c] = ch
+        lines.append(f"m{m:02d} |{''.join(row)}|")
+    return "\n".join(lines)
+
+
+def format_report(rep: SimReport) -> str:
+    r = rep.row()
+    head = " | ".join(f"{k}={v}" for k, v in r.items())
+    util = " ".join(f"{u:.2f}" for u in rep.machine_util)
+    return f"{head}\n     machine_util: [{util}]"

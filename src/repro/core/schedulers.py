@@ -1,0 +1,248 @@
+"""Pluggable scheduling policies (the paper's feature (ii)).
+
+Every policy is a pure function ``(state, tables, lcap) -> Decision`` where
+``Decision = (task_id, machine_id)`` (int32; ``task_id == -1`` means "nothing
+to schedule").  The engine dispatches on an integer policy id with
+``lax.switch`` so a whole *sweep over policies* can be expressed with `vmap`.
+
+Adding a new method = writing one function and registering it — exactly the
+paper's plug-in workflow, minus the GUI dialog.
+
+Immediate policies (head-of-queue task, choose machine):
+  FCFS   earliest-available machine
+  RR     round-robin over machines with queue room
+  MET    minimum expected execution time (load-blind)
+  MCT    minimum expected completion time
+  EE_MET minimum energy (EET * P_active)
+  EE_MCT minimum energy among deadline-feasible machines, else min completion
+         (FELARE [12] style energy-aware scheduling)
+
+Batch policies (choose both task and machine from the whole batch queue):
+  MINMIN  classic Min-Min (pair with minimum completion time)
+  MAXMIN  classic Max-Min (task whose best completion is worst)
+  EDF_MCT earliest-deadline-first task, min-completion machine
+
+Cancellation (the E2C "canceled tasks" pool) is a wrapper: when
+``cancel_infeasible`` is on and even the *best* machine cannot meet the
+selected task's deadline, the task is cancelled instead of mapped.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as S
+
+
+class Decision(NamedTuple):
+    task: jnp.ndarray      # i32 () task id, -1 = no-op
+    machine: jnp.ndarray   # i32 () machine id, -1 = no-op
+    cancel: jnp.ndarray    # bool () cancel instead of map
+
+
+class SchedView(NamedTuple):
+    """Precomputed tensors shared by all policies (built once per call).
+
+    The full (N, M) completion matrix is NOT precomputed — only the two
+    batch policies need it (``completion_full``); immediate policies use
+    one O(M) row (``completion_row``), which cuts the per-drain-step
+    work for the common case (EXPERIMENTS.md §Perf sim-cell iteration).
+    """
+    in_batch: jnp.ndarray    # bool (N,)
+    room: jnp.ndarray        # bool (M,)  machine queue has space
+    avail: jnp.ndarray       # f32 (M,)   earliest start time for new work
+    eet_nm: jnp.ndarray      # f32 (N, M) expected exec time of task n on m
+    energy_nm: jnp.ndarray   # f32 (N, M) eet * active power
+    head: jnp.ndarray        # i32 ()     FIFO head of batch queue (-1 empty)
+    any_room: jnp.ndarray    # bool ()
+
+    def completion_row(self, t) -> jnp.ndarray:
+        """(M,) expected completion of task t on each machine."""
+        return self.avail + self.eet_nm[t]
+
+    def completion_full(self) -> jnp.ndarray:
+        return self.avail[None, :] + self.eet_nm
+
+
+BIG = jnp.float32(1e30)
+
+
+def build_view(state: S.SimState, tables: S.StaticTables,
+               lcap: int, const: tuple | None = None) -> SchedView:
+    """``const``: optional precomputed (eet_nm, energy_nm) — both are
+    simulation invariants; the engine hoists them out of the drain loop
+    (EXPERIMENTS.md §Perf, sim-cell iteration)."""
+    tasks, mach = state.tasks, state.machines
+    n = tasks.arrival.shape[0]
+    in_batch = tasks.status == S.IN_BATCH
+    # incremental integer queue counts maintained by the engine (exact)
+    qc = state.mq_count
+    room = qc < lcap
+    avail = S.machine_available(state, tables)
+    if const is None:
+        eet_nm = tables.eet[tasks.type_id[:, None], mach.mtype[None, :]]
+        energy_nm = eet_nm * tables.power[mach.mtype, 1][None, :]
+    else:
+        eet_nm, energy_nm = const
+    head = jnp.where(in_batch.any(),
+                     jnp.argmax(in_batch), -1).astype(jnp.int32)
+    return SchedView(in_batch, room, avail, eet_nm, energy_nm,
+                     head, room.any())
+
+
+def _pick_machine(view: SchedView, scores: jnp.ndarray) -> jnp.ndarray:
+    """argmin of (M,) scores over machines with room; -1 if none."""
+    masked = jnp.where(view.room, scores, BIG)
+    m = jnp.argmin(masked).astype(jnp.int32)
+    return jnp.where(view.any_room, m, -1)
+
+
+def _head_decision(view: SchedView, scores_m: jnp.ndarray) -> Decision:
+    ok = (view.head >= 0) & view.any_room
+    m = _pick_machine(view, scores_m)
+    return Decision(jnp.where(ok, view.head, -1).astype(jnp.int32),
+                    jnp.where(ok, m, -1).astype(jnp.int32),
+                    jnp.bool_(False))
+
+
+# --------------------------------------------------------------------------
+# Immediate policies
+# --------------------------------------------------------------------------
+def fcfs(state, tables, view: SchedView, rr_ptr) -> Decision:
+    return _head_decision(view, view.avail)
+
+
+def round_robin(state, tables, view: SchedView, rr_ptr) -> Decision:
+    n_m = view.room.shape[0]
+    # first machine with room at or after rr_ptr (cyclic)
+    order = (jnp.arange(n_m) + rr_ptr) % n_m
+    has_room = view.room[order]
+    pick = jnp.argmax(has_room)             # first True in cyclic order
+    m = order[pick].astype(jnp.int32)
+    ok = (view.head >= 0) & view.any_room
+    return Decision(jnp.where(ok, view.head, -1).astype(jnp.int32),
+                    jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
+
+
+def met(state, tables, view: SchedView, rr_ptr) -> Decision:
+    scores = jnp.where(view.head >= 0, view.eet_nm[view.head], BIG)
+    return _head_decision(view, scores)
+
+
+def mct(state, tables, view: SchedView, rr_ptr) -> Decision:
+    scores = jnp.where(view.head >= 0,
+                       view.completion_row(view.head), BIG)
+    return _head_decision(view, scores)
+
+
+def ee_met(state, tables, view: SchedView, rr_ptr) -> Decision:
+    scores = jnp.where(view.head >= 0, view.energy_nm[view.head], BIG)
+    return _head_decision(view, scores)
+
+
+def ee_mct(state, tables, view: SchedView, rr_ptr) -> Decision:
+    """Min energy among deadline-feasible machines, else min completion."""
+    h = jnp.maximum(view.head, 0)
+    dl = state.tasks.deadline[h]
+    crow = view.completion_row(h)
+    feasible = (crow <= dl) & view.room
+    energy = jnp.where(feasible, view.energy_nm[h], BIG)
+    fallback = jnp.where(view.room, crow, BIG)
+    scores = jnp.where(feasible.any(), energy, fallback)
+    ok = (view.head >= 0) & view.any_room
+    m = jnp.argmin(scores).astype(jnp.int32)
+    return Decision(jnp.where(ok, view.head, -1).astype(jnp.int32),
+                    jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
+
+
+# --------------------------------------------------------------------------
+# Batch policies
+# --------------------------------------------------------------------------
+def _pair_mask(view: SchedView) -> jnp.ndarray:
+    return view.in_batch[:, None] & view.room[None, :]
+
+
+def minmin(state, tables, view: SchedView, rr_ptr) -> Decision:
+    mask = _pair_mask(view)
+    c = jnp.where(mask, view.completion_full(), BIG)
+    flat = jnp.argmin(c)
+    n_m = view.room.shape[0]
+    t, m = flat // n_m, flat % n_m
+    ok = mask.any()
+    return Decision(jnp.where(ok, t, -1).astype(jnp.int32),
+                    jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
+
+
+def maxmin(state, tables, view: SchedView, rr_ptr) -> Decision:
+    mask = _pair_mask(view)
+    c = jnp.where(mask, view.completion_full(), BIG)
+    best_c = jnp.min(c, axis=1)              # (N,) best completion per task
+    best_m = jnp.argmin(c, axis=1)           # (N,)
+    task_score = jnp.where(view.in_batch & view.any_room, best_c, -BIG)
+    t = jnp.argmax(task_score).astype(jnp.int32)
+    ok = mask.any()
+    return Decision(jnp.where(ok, t, -1).astype(jnp.int32),
+                    jnp.where(ok, best_m[t], -1).astype(jnp.int32),
+                    jnp.bool_(False))
+
+
+def edf_mct(state, tables, view: SchedView, rr_ptr) -> Decision:
+    dl = jnp.where(view.in_batch, state.tasks.deadline, BIG)
+    t = jnp.argmin(dl).astype(jnp.int32)
+    ok = view.in_batch.any() & view.any_room
+    scores = view.completion_row(t)
+    m = _pick_machine(view, scores)
+    return Decision(jnp.where(ok, t, -1).astype(jnp.int32),
+                    jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
+
+
+PolicyFn = Callable[..., Decision]
+
+SCHEDULERS: dict[str, PolicyFn] = {
+    "fcfs": fcfs,
+    "rr": round_robin,
+    "met": met,
+    "mct": mct,
+    "ee_met": ee_met,
+    "ee_mct": ee_mct,
+    "minmin": minmin,
+    "maxmin": maxmin,
+    "edf_mct": edf_mct,
+}
+POLICY_NAMES = list(SCHEDULERS)
+POLICY_IDS = {n: i for i, n in enumerate(POLICY_NAMES)}
+BATCH_POLICIES = {"minmin", "maxmin", "edf_mct"}
+
+
+def register_policy(name: str, fn: PolicyFn) -> int:
+    """Plug in a user-defined scheduling method (paper feature (ii))."""
+    if name in SCHEDULERS:
+        raise ValueError(f"policy {name!r} already registered")
+    SCHEDULERS[name] = fn
+    POLICY_NAMES.append(name)
+    POLICY_IDS[name] = len(POLICY_NAMES) - 1
+    return POLICY_IDS[name]
+
+
+def dispatch(policy_id: jnp.ndarray, state: S.SimState,
+             tables: S.StaticTables, lcap: int,
+             cancel_infeasible: bool | jnp.ndarray,
+             const: tuple | None = None) -> Decision:
+    """Run the selected policy + the cancellation wrapper."""
+    view = build_view(state, tables, lcap, const)
+    branches = [
+        (lambda fn: (lambda args: fn(*args)))(SCHEDULERS[n])
+        for n in POLICY_NAMES
+    ]
+    dec = jax.lax.switch(policy_id, branches,
+                         (state, tables, view, state.rr_ptr))
+    # Cancellation wrapper: if even the best machine cannot meet the selected
+    # task's deadline, cancel it (E2C's "canceled tasks" pool).
+    t = jnp.maximum(dec.task, 0)
+    best_completion = jnp.min(
+        jnp.where(view.room, view.completion_row(t), BIG))
+    infeasible = best_completion > state.tasks.deadline[t]
+    cancel = (dec.task >= 0) & jnp.asarray(cancel_infeasible) & infeasible
+    return Decision(dec.task, dec.machine, cancel)

@@ -1,0 +1,180 @@
+"""Array-encoded simulation state for the E2C discrete-event engine.
+
+The original E2C simulator keeps Python object queues (batch queue, per-machine
+queues) mutated by a Qt event loop.  To make the simulator jit-able, vmappable
+and shardable we re-encode the exact same lifecycle as fixed-shape arrays:
+
+* the *batch queue* is the set of tasks with ``status == IN_BATCH`` (FIFO order
+  is task-id order; workloads are sorted by arrival time),
+* a *machine queue* is the set of tasks with ``status == IN_MQ`` and
+  ``machine == m`` (service order is the mapping sequence number ``seq``),
+* the *cancelled* / *missed* pools of the GUI are the terminal statuses.
+
+Every E2C state transition becomes a masked vector update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Task lifecycle (matches the E2C GUI components; see DESIGN.md table).
+# ---------------------------------------------------------------------------
+NOT_ARRIVED = 0      # generated but not yet in the system
+IN_BATCH = 1         # waiting in the batch queue
+IN_MQ = 2            # mapped: waiting in a machine's local queue
+RUNNING = 3          # executing on a machine
+COMPLETED = 4        # finished before its deadline
+CANCELLED = 5        # scheduler cancelled (E2C "canceled tasks" pool)
+MISSED_QUEUE = 6     # deadline expired while waiting (batch or machine queue)
+MISSED_RUNNING = 7   # deadline expired while executing -> dropped from machine
+
+NUM_STATUSES = 8
+TERMINAL = (COMPLETED, CANCELLED, MISSED_QUEUE, MISSED_RUNNING)
+
+INF = jnp.float32(jnp.inf)
+
+
+def register_pytree(cls):
+    """Register a dataclass as a JAX pytree (all fields are leaves)."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+
+    def flatten(obj):
+        return tuple(getattr(obj, n) for n in fields), None
+
+    def unflatten(_, leaves):
+        return cls(*leaves)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@register_pytree
+@dataclasses.dataclass
+class TaskTable:
+    """One row per task (fixed N; pad with NOT_ARRIVED + arrival=inf)."""
+
+    arrival: jnp.ndarray    # f32 (N,)
+    type_id: jnp.ndarray    # i32 (N,)  row of the EET matrix
+    deadline: jnp.ndarray   # f32 (N,)  absolute time
+    status: jnp.ndarray     # i32 (N,)
+    machine: jnp.ndarray    # i32 (N,)  assigned machine id, -1 if unmapped
+    seq: jnp.ndarray        # i32 (N,)  mapping sequence number (queue order)
+    t_start: jnp.ndarray    # f32 (N,)  execution start time (-1 if never ran)
+    t_end: jnp.ndarray      # f32 (N,)  terminal time (-1 while live)
+
+
+@register_pytree
+@dataclasses.dataclass
+class MachineState:
+    """One row per machine."""
+
+    mtype: jnp.ndarray        # i32 (M,)  row of the power table / EET column
+    running: jnp.ndarray      # i32 (M,)  task id currently executing, -1 idle
+    busy_until: jnp.ndarray   # f32 (M,)  completion time of `running`
+    active_time: jnp.ndarray  # f32 (M,)  accumulated execution seconds
+    energy: jnp.ndarray       # f32 (M,)  accumulated *active* energy (J)
+
+
+@register_pytree
+@dataclasses.dataclass
+class SimState:
+    """Full simulator state threaded through ``lax.while_loop``."""
+
+    time: jnp.ndarray        # f32 ()  current simulation time
+    tasks: TaskTable
+    machines: MachineState
+    seq_counter: jnp.ndarray  # i32 () next mapping sequence number
+    rr_ptr: jnp.ndarray       # i32 () round-robin machine pointer
+    n_events: jnp.ndarray     # i32 () processed event count (guard/telemetry)
+    mq_count: jnp.ndarray     # i32 (M,) tasks waiting per machine queue —
+    #                           incrementally maintained (exact int math),
+    #                           replaces an O(N*M) recount per drain step
+
+
+@register_pytree
+@dataclasses.dataclass
+class StaticTables:
+    """Read-only problem description (still traced so it can be vmapped)."""
+
+    eet: jnp.ndarray        # f32 (T_types, M_types) expected execution times
+    power: jnp.ndarray      # f32 (M_types, 2) [idle_W, active_W]
+    noise: jnp.ndarray      # f32 (N,) multiplicative actual/expected exec time
+
+
+def init_state(tasks: TaskTable, mtype: jnp.ndarray) -> SimState:
+    n = tasks.arrival.shape[0]
+    m = mtype.shape[0]
+    machines = MachineState(
+        mtype=mtype.astype(jnp.int32),
+        running=jnp.full((m,), -1, jnp.int32),
+        busy_until=jnp.zeros((m,), jnp.float32),
+        active_time=jnp.zeros((m,), jnp.float32),
+        energy=jnp.zeros((m,), jnp.float32),
+    )
+    tasks = TaskTable(
+        arrival=tasks.arrival.astype(jnp.float32),
+        type_id=tasks.type_id.astype(jnp.int32),
+        deadline=tasks.deadline.astype(jnp.float32),
+        status=jnp.full((n,), NOT_ARRIVED, jnp.int32),
+        machine=jnp.full((n,), -1, jnp.int32),
+        seq=jnp.full((n,), jnp.iinfo(jnp.int32).max, jnp.int32),
+        t_start=jnp.full((n,), -1.0, jnp.float32),
+        t_end=jnp.full((n,), -1.0, jnp.float32),
+    )
+    return SimState(
+        time=jnp.float32(0.0),
+        tasks=tasks,
+        machines=machines,
+        seq_counter=jnp.int32(0),
+        rr_ptr=jnp.int32(0),
+        n_events=jnp.int32(0),
+        mq_count=jnp.zeros((m,), jnp.int32),
+    )
+
+
+def is_terminal(status: jnp.ndarray) -> jnp.ndarray:
+    return status >= COMPLETED
+
+
+def exec_time(tables: StaticTables, tasks: TaskTable, task_id: jnp.ndarray,
+              mtype: jnp.ndarray) -> jnp.ndarray:
+    """Actual execution time of `task_id` on a machine of type `mtype`."""
+    ttype = tasks.type_id[task_id]
+    return tables.eet[ttype, mtype] * tables.noise[task_id]
+
+
+def queue_count(tasks: TaskTable, m: int | jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((tasks.status == IN_MQ) & (tasks.machine == m))
+
+
+def queue_counts(tasks: TaskTable, n_machines: int) -> jnp.ndarray:
+    """(M,) number of tasks waiting in each machine queue."""
+    onehot = (tasks.status == IN_MQ)[:, None] & (
+        tasks.machine[:, None] == jnp.arange(n_machines)[None, :])
+    return jnp.sum(onehot, axis=0).astype(jnp.int32)
+
+
+def queued_work(tasks: TaskTable, tables: StaticTables,
+                machines: MachineState) -> jnp.ndarray:
+    """(M,) total *expected* work waiting in each machine's queue.
+
+    Deliberately uses EET (not noise-adjusted actual times): the scheduler
+    only knows expectations, as in E2C.
+    """
+    n_machines = machines.mtype.shape[0]
+    per_task = tables.eet[tasks.type_id[:, None], machines.mtype[None, :]]
+    mask = (tasks.status == IN_MQ)[:, None] & (
+        tasks.machine[:, None] == jnp.arange(n_machines)[None, :])
+    return jnp.sum(jnp.where(mask, per_task, 0.0), axis=0)
+
+
+def machine_available(state: SimState, tables: StaticTables) -> jnp.ndarray:
+    """(M,) earliest time each machine could start a *new* task."""
+    mach = state.machines
+    base = jnp.maximum(state.time, jnp.where(mach.running >= 0,
+                                             mach.busy_until, state.time))
+    return base + queued_work(state.tasks, tables, mach)

@@ -1,0 +1,161 @@
+"""Workload generation and trace loading (E2C "workload" component).
+
+E2C's workload component generates task arrivals and lets the user load a
+trace CSV.  We support both: synthetic generators (Poisson / uniform / bursty
+arrival processes with a task-type mixture and deadline slack factors) and the
+E2C trace format ``task_id,task_type,arrival_time[,deadline]``.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.state import TaskTable
+
+
+@dataclass
+class Workload:
+    arrival: np.ndarray    # (N,) f32, sorted ascending
+    type_id: np.ndarray    # (N,) i32
+    deadline: np.ndarray   # (N,) f32 absolute
+
+    def __post_init__(self):
+        self.arrival = np.asarray(self.arrival, np.float32)
+        self.type_id = np.asarray(self.type_id, np.int32)
+        self.deadline = np.asarray(self.deadline, np.float32)
+        order = np.argsort(self.arrival, kind="stable")
+        self.arrival = self.arrival[order]
+        self.type_id = self.type_id[order]
+        self.deadline = self.deadline[order]
+
+    @property
+    def n_tasks(self) -> int:
+        return self.arrival.shape[0]
+
+    def to_task_table(self) -> TaskTable:
+        import jax.numpy as jnp
+        n = self.n_tasks
+        return TaskTable(
+            arrival=jnp.asarray(self.arrival),
+            type_id=jnp.asarray(self.type_id),
+            deadline=jnp.asarray(self.deadline),
+            status=jnp.zeros((n,), jnp.int32),
+            machine=jnp.full((n,), -1, jnp.int32),
+            seq=jnp.zeros((n,), jnp.int32),
+            t_start=jnp.zeros((n,), jnp.float32),
+            t_end=jnp.zeros((n,), jnp.float32),
+        )
+
+
+def poisson_workload(n_tasks: int, rate: float, n_task_types: int, *,
+                     mean_eet: np.ndarray | None = None,
+                     slack: float = 3.0, slack_jitter: float = 0.5,
+                     type_probs: np.ndarray | None = None,
+                     seed: int = 0) -> Workload:
+    """Poisson arrivals at `rate` tasks/sec; deadline = arrival + slack*EETbar.
+
+    ``mean_eet`` is the per-type mean execution time used to scale deadlines
+    (if None, 1.0 for every type).  ``slack`` multiplies it; ``slack_jitter``
+    adds lognormal jitter so deadlines are not perfectly ordered with
+    arrivals (the regime where dropping/cancellation matters).
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_tasks)
+    arrival = np.cumsum(gaps).astype(np.float32)
+    if type_probs is None:
+        type_probs = np.full(n_task_types, 1.0 / n_task_types)
+    type_id = rng.choice(n_task_types, size=n_tasks, p=type_probs)
+    if mean_eet is None:
+        mean_eet = np.ones(n_task_types, np.float32)
+    jitter = rng.lognormal(0.0, slack_jitter, size=n_tasks)
+    deadline = arrival + slack * jitter * mean_eet[type_id]
+    return Workload(arrival, type_id, deadline.astype(np.float32))
+
+
+def uniform_workload(n_tasks: int, horizon: float, n_task_types: int, *,
+                     mean_eet: np.ndarray | None = None, slack: float = 3.0,
+                     seed: int = 0) -> Workload:
+    rng = np.random.default_rng(seed)
+    arrival = np.sort(rng.uniform(0, horizon, n_tasks)).astype(np.float32)
+    type_id = rng.integers(0, n_task_types, n_tasks)
+    if mean_eet is None:
+        mean_eet = np.ones(n_task_types, np.float32)
+    deadline = arrival + slack * mean_eet[type_id]
+    return Workload(arrival, type_id, deadline.astype(np.float32))
+
+
+def bursty_workload(n_tasks: int, rate: float, n_task_types: int, *,
+                    burst_factor: float = 8.0, burst_prob: float = 0.1,
+                    mean_eet: np.ndarray | None = None, slack: float = 3.0,
+                    seed: int = 0) -> Workload:
+    """Markov-modulated Poisson: occasional bursts at burst_factor*rate."""
+    rng = np.random.default_rng(seed)
+    bursting = rng.random(n_tasks) < burst_prob
+    rates = np.where(bursting, rate * burst_factor, rate)
+    gaps = rng.exponential(1.0 / rates)
+    arrival = np.cumsum(gaps).astype(np.float32)
+    type_id = rng.integers(0, n_task_types, n_tasks)
+    if mean_eet is None:
+        mean_eet = np.ones(n_task_types, np.float32)
+    deadline = arrival + slack * mean_eet[type_id]
+    return Workload(arrival, type_id, deadline.astype(np.float32))
+
+
+def load_workload_csv(path_or_text: str, *, n_task_types: int | None = None,
+                      mean_eet: np.ndarray | None = None,
+                      slack: float = 3.0) -> Workload:
+    """Load an E2C trace: ``task_id,task_type,arrival_time[,deadline]``.
+
+    task_type may be an integer id or a name (names are enumerated in order
+    of first appearance).  If the deadline column is absent it is synthesized
+    as ``arrival + slack * mean_eet[type]`` (E2C traces often omit it).
+    """
+    if os.path.exists(path_or_text):
+        with open(path_or_text) as f:
+            text = f.read()
+    else:
+        text = path_or_text
+    rows = [r for r in csv.reader(io.StringIO(text)) if r and any(
+        c.strip() for c in r)]
+    start = 1 if not _is_float(rows[0][2]) else 0   # optional header
+    names: dict[str, int] = {}
+    type_id, arrival, deadline = [], [], []
+    for r in rows[start:]:
+        t = r[1].strip()
+        if t.lstrip("-").isdigit():
+            tid = int(t)
+        else:
+            tid = names.setdefault(t, len(names))
+        type_id.append(tid)
+        arrival.append(float(r[2]))
+        deadline.append(float(r[3]) if len(r) > 3 and r[3].strip() else np.nan)
+    arrival = np.asarray(arrival, np.float32)
+    type_id = np.asarray(type_id, np.int32)
+    deadline = np.asarray(deadline, np.float32)
+    if np.any(np.isnan(deadline)):
+        nt = n_task_types or (int(type_id.max()) + 1)
+        me = mean_eet if mean_eet is not None else np.ones(nt, np.float32)
+        synth = arrival + slack * me[type_id]
+        deadline = np.where(np.isnan(deadline), synth, deadline)
+    return Workload(arrival, type_id, deadline)
+
+
+def save_workload_csv(w: Workload, path: str) -> None:
+    with open(path, "w", newline="") as f:
+        wr = csv.writer(f)
+        wr.writerow(["task_id", "task_type", "arrival_time", "deadline"])
+        for i in range(w.n_tasks):
+            wr.writerow([i, int(w.type_id[i]), f"{w.arrival[i]:.6f}",
+                         f"{w.deadline[i]:.6f}"])
+
+
+def _is_float(s: str) -> bool:
+    try:
+        float(s)
+        return True
+    except ValueError:
+        return False

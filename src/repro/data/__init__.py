@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, DataState, TokenStream,
+                                 make_stream)
+
+__all__ = ["DataConfig", "DataState", "TokenStream", "make_stream"]

@@ -1,0 +1,139 @@
+"""Pallas TPU flash attention kernel.
+
+Targets the TPU memory hierarchy: Q/K/V blocks are staged HBM->VMEM by
+``BlockSpec``s, the (bq x bk) logit tile lives in registers/VMEM, and the
+online-softmax running stats (m, l) plus the fp32 output accumulator are
+VMEM scratch that persists across the sequential kv grid steps (TPU grids
+execute in order, last dim innermost).  Causal masking skips whole kv blocks
+above the diagonal with ``pl.when`` — the 2x masked-FLOP waste of the XLA
+scan path disappears here.
+
+Grid: (B*H, Sq/bq, Sk/bk), kv innermost.  MQA/GQA callers repeat KV heads
+first (see ops.py).  Validated against ref.py in interpret mode on CPU;
+real-TPU runs select it with ModelOptions(attn_impl="pallas").
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  bq: int, bk: int, n_k: int, seq_k: int):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # block-level skip: strictly-above-diagonal blocks contribute nothing;
+    # with a window, blocks entirely left of the band are skipped too.
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window:
+        run = jnp.logical_and(run, k_start + bk - 1 >= q_start - window + 1) \
+            if causal else run
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # (bq, bk)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        logits = jnp.where(mask, logits, NEG)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-20)[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q/k/v: (BH, S, hd) (heads folded into the batch dim) -> (BH, Sq, hd).
+
+    Blocks default to 128x128 (MXU-aligned); hd is kept whole in VMEM
+    (<= 256 for all assigned archs -> q/k/v tiles are <= 128x256x4B = 128KB,
+    comfortably inside the ~16MB VMEM budget together with the fp32
+    accumulator).
+    """
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    n_q = (Sq + pad_q) // bq
+    n_k = (Sk + pad_k) // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, n_k=n_k, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

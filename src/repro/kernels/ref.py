@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q/k/v: (BH, S, hd). Dense masked softmax attention in fp32."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    logits = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(mask, w, 0.0)
+    return jnp.einsum("bqk,bkh->bqh", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def masked_argmin_ref(values, mask):
+    """(N, M) values + bool mask -> (flat_idx, min) with BIG for empty."""
+    masked = jnp.where(mask, values.astype(jnp.float32), jnp.float32(1e30))
+    idx = jnp.argmin(masked)
+    return idx.astype(jnp.int32), masked.reshape(-1)[idx]
+
+
+def grouped_matmul_ref(lhs, rhs, group_sizes):
+    """lhs (G, C, D) x rhs (G, D, F) with only the first group_sizes[g]
+    rows of each group valid -> (G, C, F); invalid rows are zero."""
+    G, C, D = lhs.shape
+    valid = jnp.arange(C)[None, :] < group_sizes[:, None]      # (G, C)
+    lhs = jnp.where(valid[..., None], lhs, 0)
+    out = jnp.einsum("gcd,gdf->gcf", lhs.astype(jnp.float32),
+                     rhs.astype(jnp.float32))
+    return jnp.where(valid[..., None], out, 0).astype(lhs.dtype)

@@ -1,0 +1,80 @@
+"""Pallas kernel for the E2C scheduler's inner reduction.
+
+MCT / Min-Min / Max-Min all reduce a masked (tasks x machines) completion-
+time matrix to an argmin pair — the one compute hot-spot of the paper's
+artifact when sweeping thousands of replicas with large task batches.
+The kernel tiles the task dim into VMEM blocks, keeps the machine dim whole
+(M <= a few hundred in any E2C study), and carries the running (min, argmin)
+in SMEM scratch across sequential grid steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e30  # python float: jnp constants would be captured tracers in pallas
+
+
+def _argmin_kernel(val_ref, mask_ref, idx_out, min_out, best_scr, *,
+                   bn: int, m: int, n_blocks: int, n_total: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        best_scr[0] = jnp.float32(BIG)
+        best_scr[1] = 0.0                       # flat index as f32 payload
+
+    vals = val_ref[...].astype(jnp.float32)     # (bn, m)
+    mask = mask_ref[...]
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, m), 0)
+    valid = jnp.logical_and(mask, rows < n_total)
+    vals = jnp.where(valid, vals, BIG)
+    # lexicographic argmin == flat argmin with row-major order
+    flat = vals.reshape(-1)
+    j = jnp.argmin(flat)
+    vmin = flat[j]
+    gidx = i * bn * m + j
+
+    @pl.when(vmin < best_scr[0])
+    def _update():
+        best_scr[0] = vmin
+        best_scr[1] = gidx.astype(jnp.float32)
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        min_out[0] = best_scr[0]
+        idx_out[0] = best_scr[1].astype(jnp.int32)
+
+
+def masked_argmin(values: jnp.ndarray, mask: jnp.ndarray, *,
+                  block_n: int = 256, interpret: bool = False):
+    """(N, M) masked argmin -> (flat_idx i32, min f32). Empty mask -> BIG."""
+    N, M = values.shape
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    n_blocks = (N + pad) // bn
+
+    kernel = functools.partial(_argmin_kernel, bn=bn, m=M,
+                               n_blocks=n_blocks, n_total=N)
+    idx, vmin = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((bn, M), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, M), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        interpret=interpret,
+    )(values, mask)
+    return idx[0], vmin[0]

@@ -1,0 +1,456 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 94 layers reports 1/94th of the real FLOPs (verified in
+tests/test_hlo_cost.py).  Since this framework scans everything (layers,
+microbatches, loss chunks, kv chunks), the roofline terms would be
+garbage without correcting for loop trip counts.
+
+This module parses the post-optimization HLO text and walks it:
+
+  cost(computation) = sum over ops of
+      op_flops + op_bytes                          (local ops)
+    + trips(while) * cost(body) + cost(cond)       (while ops)
+    + cost(branch_max)                             (conditionals)
+    + cost(called)                                 (fusion/call: params +
+                                                    result bytes only)
+
+Trip counts are recovered from scan-canonical while conditions
+(``compare(iv, constant(N)), direction=LT``); loops whose trip count
+cannot be proven are counted once and reported in ``unknown_loops``.
+
+Collectives (all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute) are accumulated the same way, so a psum inside a
+scanned MoE layer counts once *per layer*, not once per program.
+
+FLOP conventions follow HloCostAnalysis: dot = 2*prod(result)*K,
+elementwise = prod(shape), transcendental = prod(shape); data-movement
+ops are 0 FLOPs.  Bytes = operands + result for top-level/fusion ops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "c64": 8, "c128": 16, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "compare", "select", "and", "or", "not", "xor", "negate", "abs",
+    "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "clamp", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "power", "atan2",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+                   "sine", "cosine", "tan", "expm1", "log1p", "erf",
+                   "cbrt"}
+_ZERO_FLOP = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "copy", "copy-start", "copy-done", "reshape",
+    "broadcast", "transpose", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "pad", "reverse", "iota",
+    "convert", "gather", "scatter", "sort", "rng", "rng-bit-generator",
+    "after-all", "optimization-barrier", "partition-id", "replica-id",
+    "infeed", "outfeed", "send", "recv", "send-done", "recv-done",
+    "custom-call", "all-gather", "all-reduce", "reduce-scatter",
+    "all-to-all", "collective-permute", "all-gather-start",
+    "all-gather-done", "all-reduce-start", "all-reduce-done",
+    "collective-permute-start", "collective-permute-done", "domain",
+    "add-dependency", "get-dimension-size",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) over every array in a shape string
+    (handles tuple shapes '(f32[2,3], s32[4])')."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Op:
+    name: str
+    shape: str          # result shape string
+    opcode: str
+    operands: list[str]
+    attrs: str          # raw trailing text (attributes)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    unknown_loops: int = 0
+
+    def add(self, other: "CostTotals", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        self.transcendentals += other.transcendentals * times
+        for k, v in other.collectives.items():
+            d = self.collectives.setdefault(k, {"count": 0, "bytes": 0})
+            d["count"] += v["count"] * times
+            d["bytes"] += v["bytes"] * times
+        self.unknown_loops += other.unknown_loops
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "transcendentals": self.transcendentals,
+                "collective_bytes": self.collective_bytes,
+                "collectives": {
+                    k: {"count": round(v["count"], 1),
+                        "bytes": v["bytes"]}
+                    for k, v in self.collectives.items()},
+                "unknown_loops": self.unknown_loops}
+
+
+# ---------------------------------------------------------------------------
+# Parsing
+# ---------------------------------------------------------------------------
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+
+
+def parse_module(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line or line.startswith("HloModule"):
+            continue
+        if line.endswith("{") and ("=" not in line.split("(")[0]):
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, operand_str, attrs = m.groups()
+        # operand names: %foo.1 tokens inside the parens (top level only)
+        operands = re.findall(r"%?([\w\.\-]+)", _strip_nested(operand_str))
+        op = Op(name, shape, opcode, operands, attrs)
+        cur.ops.append(op)
+        cur.by_name[name] = op
+    return comps
+
+
+def _strip_nested(s: str) -> str:
+    """Remove nested parenthesized/braced regions (keeps top-level names)."""
+    out, depth = [], 0
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        elif depth == 0:
+            out.append(ch)
+    return "".join(out)
+
+
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations|"
+    r"called_computations)="
+    r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+
+
+def called_computations(op: Op) -> list[str]:
+    names: list[str] = []
+    for m in _CALLED_RE.finditer(op.attrs):
+        for n in m.group(1).split(","):
+            names.append(n.strip().lstrip("%"))
+    return names
+
+
+def while_trip_count(op: Op, comps: dict[str, Computation]) -> int | None:
+    """Recover scan-canonical trip counts.
+
+    jax scans lower to ``while(cond: iv < constant(N))``; after fusion the
+    compare often lives in a wrapped fusion computation with the constant
+    passed as an argument from the condition region.  Heuristic (validated
+    against unrolled references in tests): require an LT compare somewhere
+    in the condition's call tree, then take the largest s32 constant in
+    the condition region.  Data-dependent loops (e.g. the DES engine's
+    next-event loop) have no such constant -> None (counted once,
+    reported via ``unknown_loops``)."""
+    m = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+    if not m or m.group(1) not in comps:
+        return None
+    seen: set[str] = set()
+    stack = [m.group(1)]
+    has_lt = False
+    max_const: int | None = None
+    while stack:
+        cname = stack.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        for o in comps[cname].ops:
+            if o.opcode == "compare" and "direction=LT" in o.attrs:
+                has_lt = True
+            if o.opcode == "constant" and o.shape.startswith("s32"):
+                mm = re.search(r"constant\((-?\d+)\)", raw_text(o))
+                if mm:
+                    v = int(mm.group(1))
+                    if max_const is None or v > max_const:
+                        max_const = v
+            stack.extend(called_computations(o))
+    if has_lt and max_const is not None and max_const > 0:
+        return max_const
+    return None
+
+
+def raw_text(op: Op) -> str:
+    return f"{op.name} = {op.shape} {op.opcode}({','.join(op.operands)})" \
+           f"{op.attrs}"
+
+
+# ---------------------------------------------------------------------------
+# Cost walk
+# ---------------------------------------------------------------------------
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res_elems, _ = shape_elems_bytes(op.shape)
+    # contracted size from the lhs operand's contracting dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    k = 1
+    if m and op.operands:
+        lhs = comp.by_name.get(op.operands[0])
+        if lhs is not None:
+            dims_m = _SHAPE_RE.search(lhs.shape)
+            if dims_m:
+                dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+    return 2.0 * res_elems * k
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    _, out_b = shape_elems_bytes(op.shape)
+    in_b = 0
+    for name in op.operands:
+        src = comp.by_name.get(name)
+        if src is None:
+            continue
+        if src.shape.lstrip().startswith("("):
+            continue            # tuple operand = alias bundle, not a read
+        _, b = shape_elems_bytes(src.shape)
+        in_b += b
+    return float(out_b + in_b)
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  comps: dict[str, Computation]) -> float:
+    """HBM traffic of a fusion: result write + true reads of each param.
+
+    TPU fusions read a parameter in full UNLESS every internal consumer is
+    a (dynamic-)slice — then only the slice leaves HBM.  Likewise a fusion
+    whose root is dynamic-update-slice writes only the update window (the
+    big operand is aliased in place), so the aliased input/output pair is
+    charged at the update size, not the full buffer.
+    """
+    called = called_computations(op)
+    inner = comps.get(called[0]) if called else None
+    if inner is None:
+        return _op_bytes(op, comp)
+
+    # inner parameter name -> op, in positional order
+    params = [o for o in inner.ops if o.opcode == "parameter"]
+
+    def param_index(o: Op) -> int:
+        m = re.search(r"(\d+)$", o.name.split(".")[0])
+        if m:
+            return int(m.group(1))
+        return len(params)
+    params.sort(key=param_index)
+
+    # consumers of each inner value
+    consumers: dict[str, list[Op]] = {}
+    for o in inner.ops:
+        for operand in o.operands:
+            consumers.setdefault(operand, []).append(o)
+
+    read_b = 0.0
+    dus_aliased: set[str] = set()
+    root = inner.ops[-1] if inner.ops else None
+    if root is not None and root.opcode == "dynamic-update-slice" \
+            and root.operands:
+        dus_aliased.add(root.operands[0])
+
+    for i, p in enumerate(params):
+        if i >= len(op.operands):
+            break
+        _, full = shape_elems_bytes(p.shape)
+        uses = consumers.get(p.name, [])
+        if p.name in dus_aliased or any(
+                u.opcode == "dynamic-update-slice" and u.operands
+                and u.operands[0] == p.name for u in uses):
+            # aliased in-place target: charged via the update write below
+            continue
+        if uses and all(u.opcode in ("dynamic-slice", "slice")
+                        for u in uses):
+            read_b += max(shape_elems_bytes(u.shape)[1] for u in uses)
+        else:
+            read_b += full
+
+    if root is not None and root.opcode == "dynamic-update-slice" \
+            and len(root.operands) >= 2:
+        upd = inner.by_name.get(root.operands[1])
+        upd_b = shape_elems_bytes(upd.shape)[1] if upd is not None \
+            else shape_elems_bytes(op.shape)[1]
+        return float(read_b + 2 * upd_b)      # read update + write window
+    _, out_b = shape_elems_bytes(op.shape)
+    return float(read_b + out_b)
+
+
+def cost_computation(comp: Computation, comps: dict[str, Computation],
+                     memo: dict[str, CostTotals]) -> CostTotals:
+    if comp.name in memo:
+        return memo[comp.name]
+    total = CostTotals()
+    memo[comp.name] = total          # guards recursion
+    for op in comp.ops:
+        elems, _ = shape_elems_bytes(op.shape)
+        if op.opcode == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+            cond = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+            trips = while_trip_count(op, comps)
+            if trips is None:
+                trips = 1
+                total.unknown_loops += 1
+            if body and body.group(1) in comps:
+                total.add(cost_computation(comps[body.group(1)], comps,
+                                           memo), trips)
+            if cond and cond.group(1) in comps:
+                total.add(cost_computation(comps[cond.group(1)], comps,
+                                           memo), trips)
+            continue
+        if op.opcode == "conditional":
+            branches = called_computations(op)
+            branch_costs = [cost_computation(comps[b], comps, memo)
+                            for b in branches if b in comps]
+            if branch_costs:
+                worst = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                total.add(worst)
+            continue
+        if op.opcode in ("fusion", "call", "async-start"):
+            if op.opcode == "fusion":
+                total.bytes += _fusion_bytes(op, comp, comps)
+            else:
+                total.bytes += _op_bytes(op, comp)
+            for sub in called_computations(op):
+                if sub in comps:
+                    sc = cost_computation(comps[sub], comps, memo)
+                    total.flops += sc.flops
+                    total.transcendentals += sc.transcendentals
+                    for k, v in sc.collectives.items():
+                        d = total.collectives.setdefault(
+                            k, {"count": 0, "bytes": 0})
+                        d["count"] += v["count"]
+                        d["bytes"] += v["bytes"]
+            continue
+        base = op.opcode.removesuffix("-start")
+        if base in _COLLECTIVES:
+            _, b = shape_elems_bytes(op.shape)
+            d = total.collectives.setdefault(base, {"count": 0, "bytes": 0})
+            d["count"] += 1
+            d["bytes"] += b
+            total.bytes += _op_bytes(op, comp)
+            continue
+        if op.opcode == "dynamic-update-slice":
+            # in-place window write: read update + write window
+            upd = comp.by_name.get(op.operands[1]) if len(op.operands) > 1 \
+                else None
+            ub = shape_elems_bytes(upd.shape)[1] if upd is not None else 0
+            total.bytes += 2 * ub
+            continue
+        if op.opcode in ("dynamic-slice", "slice"):
+            _, rb = shape_elems_bytes(op.shape)
+            total.bytes += 2 * rb                  # read + write the slice
+            continue
+        if op.opcode == "dot":
+            total.flops += _dot_flops(op, comp)
+            total.bytes += _op_bytes(op, comp)
+            continue
+        if op.opcode in ("reduce", "reduce-window"):
+            in_elems = 0
+            for name in op.operands:
+                src = comp.by_name.get(name)
+                if src is not None:
+                    e, _ = shape_elems_bytes(src.shape)
+                    in_elems += e
+            total.flops += in_elems / 2        # one combine per element
+            total.bytes += _op_bytes(op, comp)
+            continue
+        if op.opcode in _TRANSCENDENTAL:
+            total.transcendentals += elems
+            total.flops += elems
+            total.bytes += _op_bytes(op, comp)
+            continue
+        if op.opcode in _ELEMENTWISE:
+            total.flops += elems
+            total.bytes += _op_bytes(op, comp)
+            continue
+        if op.opcode in _ZERO_FLOP:
+            if op.opcode not in ("parameter", "constant",
+                                 "get-tuple-element", "tuple"):
+                total.bytes += _op_bytes(op, comp)
+            continue
+        # unknown opcode: count bytes only
+        total.bytes += _op_bytes(op, comp)
+    return total
+
+
+def analyze(hlo_text: str, entry: str | None = None) -> CostTotals:
+    """Trip-count-aware totals for the module's entry computation."""
+    comps = parse_module(hlo_text)
+    if not comps:
+        return CostTotals()
+    if entry is None:
+        # the entry computation is conventionally named after the module
+        # ('main.NNN'); fall back to the largest top-level computation
+        cands = [c for c in comps if c.startswith("main")]
+        entry = cands[0] if cands else max(
+            comps, key=lambda c: len(comps[c].ops))
+    memo: dict[str, CostTotals] = {}
+    return cost_computation(comps[entry], comps, memo)

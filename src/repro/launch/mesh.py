@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init and then builds the mesh; smoke tests build 1-device meshes.
+
+Topology intent (TPU v5e):
+  * single pod:   (16, 16)    ("data", "model") — 256 chips, ICI everywhere;
+  * multi-pod:    (2, 16, 16) ("pod", "data", "model") — the "pod" axis is
+    pure data parallelism across the DCN (slow) hop; "model" stays inside
+    an ICI domain so TP collectives never cross pods.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mesh(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_local_mesh(*, data: int = 1, model: int = 1):
+    """Small mesh over however many devices this host has (tests)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"asked for {data}x{model} devices, have {n}")
+    return _mesh((data, model), ("data", "model"))
+
+
+def mesh_dp_size(mesh) -> int:
+    out = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            out *= mesh.shape[a]
+    return out
+
+
+def mesh_tp_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

@@ -1,0 +1,144 @@
+"""Per-cell distribution planner — napkin math made executable.
+
+Given (arch, shape, mesh) the planner picks, from first principles over
+the v5e memory budget, the knobs the launcher needs:
+
+  * ``microbatches`` — gradient-accumulation splits so the remat stash
+    (n_layers x tokens_per_device/mb x d_model x 2B, plus block-internal
+    peaks) fits the activation budget;
+  * ``fsdp`` — whether the bf16 compute params must be sharded over the
+    data axes too (ZeRO-3-style) instead of TP-only.  Optimizer state is
+    *always* ZeRO-1 sharded;
+  * the estimated per-chip bytes, kept in the dry-run record so the
+    planner's napkin math can be compared against XLA's
+    ``memory_analysis()`` (§Dry-run table) — this comparison is the
+    planner's regression test.
+
+The planner deliberately over-estimates (activation peak factor 4x the
+resident carry) — on a real cluster an OOM at step 40k costs more than a
+slightly conservative microbatch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import mesh_dp_size, mesh_tp_size
+
+HBM_PER_CHIP = 16e9          # v5e
+ACT_BUDGET = 6e9             # activation/stash budget within HBM
+PEAK_FACTOR = 4.0            # block-internal peak vs resident carry
+
+
+@dataclass
+class CellPlan:
+    microbatches: int = 1
+    fsdp: bool = False
+    param_bytes_per_chip: float = 0.0
+    opt_bytes_per_chip: float = 0.0
+    act_bytes_per_chip: float = 0.0
+    cache_bytes_per_chip: float = 0.0
+    notes: list[str] = field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {"microbatches": self.microbatches, "fsdp": self.fsdp,
+                "est_param_gb": round(self.param_bytes_per_chip / 1e9, 3),
+                "est_opt_gb": round(self.opt_bytes_per_chip / 1e9, 3),
+                "est_act_gb": round(self.act_bytes_per_chip / 1e9, 3),
+                "est_cache_gb": round(self.cache_bytes_per_chip / 1e9, 3),
+                "notes": self.notes}
+
+
+def _divisors_desc(n: int) -> list[int]:
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def plan_cell(cfg: ArchConfig, shape: ShapeConfig, mesh) -> CellPlan:
+    dp = mesh_dp_size(mesh)
+    tp = mesh_tp_size(mesh)
+    n_chips = dp * tp
+    p = cfg.n_params()
+    plan = CellPlan()
+
+    # ---- parameter + optimizer memory -----------------------------------
+    tp_only_bytes = 2 * p / tp
+    if shape.kind == "train":
+        # training carries fp32 master+moments: params must leave room
+        plan.fsdp = tp_only_bytes > 0.30 * HBM_PER_CHIP
+    else:
+        # inference: no optimizer state — prefer TP-only (FSDP would
+        # re-gather every layer's weights per decoded token); fall back
+        # to FSDP only when TP-only weights + cache cannot fit
+        cache_est = _kv_bytes(cfg, shape, dp, tp)
+        plan.fsdp = (tp_only_bytes + cache_est + 1e9) > HBM_PER_CHIP
+    plan.param_bytes_per_chip = (2 * p / n_chips if plan.fsdp
+                                 else tp_only_bytes)
+    if plan.fsdp:
+        plan.notes.append(
+            f"fsdp: bf16 params TP-only would be "
+            f"{tp_only_bytes/1e9:.1f} GB/chip")
+
+    if shape.kind == "train":
+        plan.opt_bytes_per_chip = 12 * p / n_chips          # ZeRO-1 fp32
+        # ---- activation stash ---------------------------------------------
+        if shape.global_batch % dp:
+            plan.notes.append(
+                f"batch {shape.global_batch} not divisible by dp={dp}")
+        per_dev_batch = max(shape.global_batch // dp, 1)
+        tokens_pd = per_dev_batch * shape.seq_len
+        # smallest number of accumulation splits whose stash fits
+        for mb in sorted(_divisors_desc(per_dev_batch)):
+            stash = cfg.n_layers * (tokens_pd / mb) * cfg.d_model * 2
+            peak = PEAK_FACTOR * (tokens_pd / mb) * cfg.d_model * 2
+            if stash + peak <= ACT_BUDGET:
+                plan.microbatches = mb
+                plan.act_bytes_per_chip = stash + peak
+                break
+        else:
+            plan.microbatches = per_dev_batch
+            stash = cfg.n_layers * shape.seq_len * cfg.d_model * 2
+            plan.act_bytes_per_chip = stash * (1 + PEAK_FACTOR /
+                                               max(cfg.n_layers, 1))
+            plan.notes.append("seq-level stash still over budget at "
+                              f"mb={per_dev_batch}; relying on remat+scan")
+    elif shape.kind == "prefill":
+        tokens_pd = max(shape.global_batch // dp, 1) * shape.seq_len
+        plan.act_bytes_per_chip = PEAK_FACTOR * tokens_pd * cfg.d_model * 2
+        plan.cache_bytes_per_chip = _kv_bytes(cfg, shape, dp, tp)
+    else:  # decode
+        plan.cache_bytes_per_chip = _kv_bytes(cfg, shape, dp, tp)
+        plan.act_bytes_per_chip = 64e6
+
+    total = (plan.param_bytes_per_chip + plan.opt_bytes_per_chip +
+             plan.act_bytes_per_chip + plan.cache_bytes_per_chip)
+    if total > HBM_PER_CHIP:
+        plan.notes.append(f"estimated {total/1e9:.1f} GB/chip > "
+                          f"{HBM_PER_CHIP/1e9:.0f} GB budget")
+    return plan
+
+
+def _kv_bytes(cfg: ArchConfig, shape: ShapeConfig, dp: int, tp: int
+              ) -> float:
+    """Per-chip decode-cache estimate (the cache shards batch over data
+    when divisible, sequence/window slots over the rest; recurrent blocks
+    keep O(d) state)."""
+    n_chips = dp * tp
+    B = shape.global_batch
+    per_layer = 0.0
+    state = 0.0
+    for kind in cfg.kinds():
+        if kind in ("global", "moe", "dense_ffn"):
+            per_layer += shape.seq_len * cfg.n_kv_heads * cfg.hd * 2 * 2
+        elif kind == "local":
+            per_layer += min(cfg.window or shape.seq_len, shape.seq_len) \
+                * cfg.n_kv_heads * cfg.hd * 2 * 2
+        elif kind == "rec":
+            state += cfg.d_rnn * (cfg.conv_width + 1) * 4
+        elif kind in ("mlstm",):
+            di = int(cfg.d_model * cfg.mlstm_proj_factor)
+            state += di * cfg.hd * 4
+        elif kind == "slstm":
+            state += cfg.d_model * 4 * 4
+    if cfg.is_encdec:
+        per_layer += cfg.n_layers * 1024 * cfg.n_kv_heads * cfg.hd * 2 * 2
+    return B * (per_layer + state) / n_chips

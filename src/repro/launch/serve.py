@@ -1,0 +1,104 @@
+"""Inference step construction (prefill / decode) + sharded artifacts.
+
+``decode_*`` and ``long_*`` shape cells lower ``serve_step`` (one new
+token against a seq_len KV cache); ``prefill_*`` cells lower
+``prefill_step``.  Cache sharding follows ``models/sharding.cache_specs``:
+batch over the data axes when divisible, cache sequence dim over the
+model axis (distributed flash-decode layout); the B=1 long-context cell
+shards the sequence over *all* axes instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.train import param_partition_specs
+from repro.models import model as M
+from repro.models import sharding as SH
+from repro.models.parallel import make_ctx
+from repro.models.transformer import ModelOptions
+
+
+@dataclass
+class ServeArtifacts:
+    param_specs: Any
+    input_specs: Any          # ShapeDtypeStructs for the step inputs
+    input_shardings: Any
+    jitted: Any
+    kind: str                 # prefill | decode
+    mopts: ModelOptions
+
+
+def build_serve_artifacts(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                          mopts: ModelOptions | None = None,
+                          fsdp: bool = False) -> ServeArtifacts:
+    mopts = mopts or ModelOptions(remat=False)
+    # decode_batch wires the distributed flash-decode layout: batch over
+    # the data axes when divisible, cache sequence over the rest — MUST
+    # match models/sharding.cache_specs or GSPMD all-gathers the cache
+    pctx = make_ctx(mesh, decode_batch=shape.global_batch)
+    _, pspecs = param_partition_specs(cfg, mesh, fsdp=fsdp)
+    specs = M.input_specs(cfg, shape, mopts)
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, PS))
+
+    if shape.kind == "prefill":
+        dax = SH.data_axes(mesh)
+        first = dax if len(dax) > 1 else (dax[0] if dax else None)
+        bspec = jax.tree.map(
+            lambda leaf: PS(first, *([None] * (leaf.ndim - 1))),
+            specs["batch"])
+        cache_like = jax.eval_shape(
+            lambda p, b: M.prefill(p, b, cfg, mopts)[1],
+            _params_like(cfg, mopts), specs["batch"])
+        cspecs = SH.cache_specs(cache_like, mesh, shape.global_batch)
+
+        def prefill_step(params, batch):
+            return M.prefill(params, batch, cfg, mopts, pctx)
+
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(ns(pspecs), ns(bspec)),
+                         out_shardings=(None, ns(cspecs)))
+        return ServeArtifacts(pspecs, specs, (pspecs, bspec), jitted,
+                              "prefill", mopts)
+
+    # decode
+    cache = specs["cache"]
+    cspecs = SH.cache_specs(cache, mesh, shape.global_batch)
+    dax = SH.data_axes(mesh)
+    d_size = 1
+    for a in dax:
+        d_size *= mesh.shape[a]
+    tok_first = None
+    if dax and shape.global_batch % d_size == 0 \
+            and shape.global_batch >= d_size:
+        tok_first = dax if len(dax) > 1 else dax[0]
+    tspec = PS(tok_first, None)
+
+    def serve_step(params, cache, tokens):
+        return M.decode_step(params, cache, tokens, cfg, mopts, pctx)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(ns(pspecs), ns(cspecs),
+                                   NamedSharding(mesh, tspec)),
+                     out_shardings=(None, ns(cspecs)),
+                     donate_argnums=(1,))
+    return ServeArtifacts(pspecs, specs, (pspecs, cspecs, tspec), jitted,
+                          "decode", mopts)
+
+
+def _params_like(cfg: ArchConfig, mopts: ModelOptions):
+    """ShapeDtypeStruct param tree (for eval_shape'ing the cache)."""
+    shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg)[0], jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, mopts.dtype)
+        if s.dtype in (jnp.float32, jnp.bfloat16)
+        else s, shapes)

@@ -1,0 +1,8 @@
+from repro.models.model import (ModelOptions, decode_step, init_cache,
+                                init_lm, init_params, input_specs, layout,
+                                loss_fn, param_axes, prefill)
+from repro.models.parallel import LOCAL, ParallelCtx, make_ctx
+
+__all__ = ["ModelOptions", "decode_step", "init_cache", "init_lm",
+           "init_params", "input_specs", "layout", "loss_fn", "param_axes",
+           "prefill", "LOCAL", "ParallelCtx", "make_ctx"]

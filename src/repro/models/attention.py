@@ -1,0 +1,409 @@
+"""Attention implementations (XLA path; the Pallas kernel lives in
+repro/kernels/flash_attention.py and is selected with ``attn_impl="pallas"``
+on real TPUs).
+
+* ``flash_chunked`` — online-softmax scan over KV chunks; O(chunk) logits
+  memory; used for full/causal attention and all decode attention.
+  The baseline causal form computes every (q, kv-chunk) pair and masks —
+  a known 2x FLOP overhead recorded in the roofline analysis.
+* ``hierarchical_causal`` — beyond-baseline exact causal attention with ~zero
+  masking waste: recursively split [A 0; B C] so off-diagonal rectangles are
+  unmasked full attention; log2(S/c) uniform batched levels combined with
+  online-softmax stats (see EXPERIMENTS.md §Perf).
+* ``sliding_window_attention`` — exact blocked local attention (each query
+  block attends its own + previous key block with a band mask).
+
+All functions take q:(B,Sq,H,hd), k/v:(B,Sk,KV,hd) with GQA group
+broadcasting, positions for masking/RoPE-free bookkeeping, and return
+(B,Sq,H,hd) in the input dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-1e30)
+
+
+def _masked_softmax_update(carry, logits, mask, vc):
+    """One online-softmax accumulation step (all fp32)."""
+    m, l, acc = carry
+    logits = jnp.where(mask, logits, NEG)
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * alpha[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _finalize(m, l, acc, B, Sq, H, hd, dtype):
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = jnp.where((l > 0)[..., None], out, 0.0)
+    # (B, KV, G, Sq, hd) -> (B, Sq, KV*G=H, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(dtype)
+
+
+def flash_chunked_stats(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        q_pos: jnp.ndarray, k_pos: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        k_valid: jnp.ndarray | None = None,
+                        chunk: int = 1024):
+    """Unnormalized online-softmax stats (m, l, acc) over KV chunks.
+
+    q_pos: (B, Sq) or (Sq,) absolute positions of queries.
+    k_pos: (B, Sk) or (Sk,) absolute positions of keys (ring caches pass
+        their slot->position map here).
+    k_valid: optional (B, Sk) or (Sk,) validity mask (e.g. unwritten cache).
+    Returns m, l: (B, KV, G, Sq); acc: (B, KV, G, Sq, hd), all fp32 —
+    combinable across sequence shards (distributed flash-decode).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = jnp.asarray(hd ** -0.5, jnp.float32)
+
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, Sq))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (B, Sk))
+    if k_valid is None:
+        k_valid = jnp.ones((B, Sk), bool)
+    elif k_valid.ndim == 1:
+        k_valid = jnp.broadcast_to(k_valid[None], (B, Sk))
+
+    c = min(chunk, Sk)
+    pad = (-Sk) % c
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)))
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, pad)))
+    nk = (Sk + pad) // c
+
+    qr = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4)  # B,KV,G,Sq,hd
+    ks = k.reshape(B, nk, c, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, c, KV, hd).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(B, nk, c).transpose(1, 0, 2)
+    kvs = k_valid.reshape(B, nk, c).transpose(1, 0, 2)
+
+    m0 = jnp.full((B, KV, G, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+
+    def body(carry, inp):
+        kc, vc, kpos_c, kval_c = inp
+        logits = jnp.einsum("bkgqh,bckh->bkgqc", qr, kc,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = kval_c[:, None, :]                       # (B, 1, c)
+        if causal:
+            mask = mask & (kpos_c[:, None, :] <= q_pos[:, :, None])
+        if window:
+            mask = mask & (q_pos[:, :, None] - kpos_c[:, None, :] < window)
+        mask = mask[:, None, None]                      # (B,1,1,Sq,c)
+        return _masked_softmax_update(carry, logits, mask, vc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps, kvs))
+    return m, l, acc
+
+
+def flash_chunked(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                  softcap=0.0, k_valid=None, chunk=1024) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks (see stats fn)."""
+    B, Sq, H, hd = q.shape
+    m, l, acc = flash_chunked_stats(q, k, v, q_pos, k_pos, causal=causal,
+                                    window=window, softcap=softcap,
+                                    k_valid=k_valid, chunk=chunk)
+    return _finalize(m, l, acc, B, Sq, H, hd, q.dtype)
+
+
+def sliding_window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                             q_pos: jnp.ndarray, *, window: int,
+                             softcap: float = 0.0) -> jnp.ndarray:
+    """Exact sliding-window attention for train/prefill (positions 0..S-1).
+
+    Blocked: query block i attends key blocks {i-1, i} with the exact band
+    mask ``0 <= q_pos - k_pos < window`` (block size = window).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    dtype = q.dtype
+    w = min(window, S)
+    pad = (-S) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nb = Sp // w
+    scale = jnp.asarray(hd ** -0.5, jnp.float32)
+
+    qb = q.reshape(B, nb, w, KV, G, hd)
+    kb = k.reshape(B, nb, w, KV, hd)
+    vb = v.reshape(B, nb, w, KV, hd)
+    # previous block (zero block for i=0)
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    kcat = jnp.concatenate([kprev, kb], axis=2)         # (B,nb,2w,KV,hd)
+    vcat = jnp.concatenate([vprev, vb], axis=2)
+
+    logits = jnp.einsum("bnqkgh,bnckh->bnkgqc", qb, kcat,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qpos_b = jnp.arange(nb)[:, None] * w + jnp.arange(w)[None, :]  # (nb, w)
+    kpos_b = (jnp.arange(nb)[:, None] - 1) * w + jnp.arange(2 * w)[None, :]
+    diff = qpos_b[:, :, None] - kpos_b[:, None, :]      # (nb, w, 2w)
+    mask = (diff >= 0) & (diff < window) & (kpos_b >= 0)[:, None, :] \
+        & (qpos_b < S)[:, :, None] & (kpos_b < S)[:, None, :]
+    logits = jnp.where(mask[None, :, None, None], logits, NEG)
+
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(mask[None, :, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bnkgqc,bnckh->bnkgqh", p.astype(dtype), vcat,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-20)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sp, H, hd)[:, :S]
+    return out.astype(dtype)
+
+
+def hierarchical_causal(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        softcap: float = 0.0,
+                        base_chunk: int = 1024) -> jnp.ndarray:
+    """Exact causal attention with ~zero masking waste (beyond-paper opt).
+
+    Decompose the causal matrix [A 0; B C]: the off-diagonal rectangle B is
+    *unmasked* full attention; recurse on A and C.  All rectangles at one
+    level have identical shapes, so each level is ONE batched matmul; the
+    only masked compute left is the block-diagonal (S/c blocks of c^2).
+    HLO FLOPs ~= (1/2) S^2 instead of S^2.  Partial results are merged with
+    online-softmax (m, l, acc) stats.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    dtype = q.dtype
+    scale = jnp.asarray(hd ** -0.5, jnp.float32)
+    c = min(base_chunk, S)
+    assert S % c == 0, "hierarchical_causal: S must be divisible by chunk"
+    nb = S // c
+
+    qr = q.reshape(B, S, KV, G, hd)
+
+    def stats(qq, kk, vv, mask):
+        """Partial attention stats. qq:(...,Lq,KV,G,hd) kk:(...,Lk,KV,hd)."""
+        logits = jnp.einsum("...qkgh,...ckh->...kgqc", qq, kk,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        if mask is not None:
+            logits = jnp.where(mask, logits, NEG)
+        m = jnp.max(logits, axis=-1)
+        p = jnp.exp(logits - m[..., None])
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("...kgqc,...ckh->...kgqh", p.astype(vv.dtype), vv,
+                         preferred_element_type=jnp.float32)
+        return m, l, acc
+
+    def merge(s1, s2):
+        m1, l1, a1 = s1
+        m2, l2, a2 = s2
+        m = jnp.maximum(m1, m2)
+        e1 = jnp.exp(m1 - m)
+        e2 = jnp.exp(m2 - m)
+        return m, l1 * e1 + l2 * e2, a1 * e1[..., None] + a2 * e2[..., None]
+
+    # ---- diagonal blocks (the only masked compute) -----------------------
+    qd = qr.reshape(B, nb, c, KV, G, hd)
+    kd = k.reshape(B, nb, c, KV, hd)
+    vd = v.reshape(B, nb, c, KV, hd)
+    tri = jnp.tril(jnp.ones((c, c), bool))[None, None, None, None]
+    md, ld, ad = stats(qd, kd, vd, tri)                 # (B,nb,KV,G,c) etc.
+    # expand to per-position stats over full S
+    m_tot = md.transpose(0, 2, 3, 1, 4).reshape(B, KV, G, S)
+    l_tot = ld.transpose(0, 2, 3, 1, 4).reshape(B, KV, G, S)
+    a_tot = ad.transpose(0, 2, 3, 1, 4, 5).reshape(B, KV, G, S, hd)
+
+    # ---- off-diagonal rectangles, level by level -------------------------
+    span = S
+    while span > c:
+        half = span // 2
+        n_rect = S // span
+        # rectangle r: q rows [r*span + half, (r+1)*span), kv [r*span, r*span+half)
+        q_lvl = qr.reshape(B, n_rect, span, KV, G, hd)[:, :, half:]
+        k_lvl = k.reshape(B, n_rect, span, KV, hd)[:, :, :half]
+        v_lvl = v.reshape(B, n_rect, span, KV, hd)[:, :, :half]
+        m2, l2, a2 = stats(q_lvl, k_lvl, v_lvl, None)   # (B,n,KV,G,half)...
+        # scatter-merge into totals at q rows of each rectangle
+        qidx = (jnp.arange(n_rect)[:, None] * span + half
+                + jnp.arange(half)[None, :]).reshape(-1)
+        m2f = m2.transpose(0, 2, 3, 1, 4).reshape(B, KV, G, n_rect * half)
+        l2f = l2.transpose(0, 2, 3, 1, 4).reshape(B, KV, G, n_rect * half)
+        a2f = a2.transpose(0, 2, 3, 1, 4, 5).reshape(B, KV, G,
+                                                     n_rect * half, hd)
+        sub = (m_tot[..., qidx], l_tot[..., qidx], a_tot[..., qidx, :])
+        mm, lm, am = merge(sub, (m2f, l2f, a2f))
+        m_tot = m_tot.at[..., qidx].set(mm)
+        l_tot = l_tot.at[..., qidx].set(lm)
+        a_tot = a_tot.at[..., qidx, :].set(am)
+        span = half
+
+    return _finalize(m_tot, l_tot, a_tot, B, S, H, hd, dtype)
+
+
+def block_causal(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                 softcap: float = 0.0, chunk: int = 1024) -> jnp.ndarray:
+    """Exact causal attention with block-banded compute (beyond-paper opt).
+
+    Query chunk i attends keys ``[0, (i+1)*c)`` — a contiguous STATIC
+    slice — so the only masked (wasted) logits are the diagonal c x c
+    blocks: computed tiles = (nb+1)/(2*nb) of the full S^2 (0.56-0.63x
+    for nb=4..8) vs 1.0x for the masked chunk scan, with no
+    scatter-merge (cf. ``hierarchical_causal``, whose ``.at[].set``
+    merges resharded badly under GSPMD — EXPERIMENTS.md §Perf).
+    Each chunk is one softmax over its full visible span: no online
+    stats chain, ~3 materialized (c x span) tiles per chunk vs ~8.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    dtype = q.dtype
+    scale = jnp.asarray(hd ** -0.5, jnp.float32)
+    c = min(chunk, S)
+    assert S % c == 0, "block_causal: S must divide by chunk"
+    nb = S // c
+    qr = q.reshape(B, nb, c, KV, G, hd)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    outs = []
+    for i in range(nb):
+        span = (i + 1) * c
+        ki = k[:, :span]                        # static slice
+        vi = v[:, :span]
+        logits = jnp.einsum("bqkgh,bckh->bkgqc", qr[:, i], ki,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        # only the trailing diagonal block needs masking
+        mask = jnp.concatenate(
+            [jnp.ones((c, i * c), bool), tri], axis=1)  # (c, span)
+        logits = jnp.where(mask[None, None, None], logits, NEG)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bkgqc,bckh->bkgqh", w.astype(dtype), vi,
+                       preferred_element_type=jnp.float32)
+        outs.append(o)                          # (B, KV, G, c, hd)
+    out = jnp.concatenate(outs, axis=3)         # (B, KV, G, S, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd).astype(dtype)
+
+
+def decode_attend(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                  slot_pos: jnp.ndarray, pos: jnp.ndarray, *,
+                  window: int = 0, softcap: float = 0.0,
+                  chunk: int = 2048) -> jnp.ndarray:
+    """One-token attention against a (possibly ring) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, L, KV, hd); slot_pos: (B, L) absolute
+    position stored in each cache slot (-1 = never written); pos: (B,)
+    current absolute position (the query's).
+    """
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    return flash_chunked(q, k_cache, v_cache, pos[:, None], slot_pos,
+                         causal=True, window=window, softcap=softcap,
+                         k_valid=valid, chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# Distributed flash-decode: KV cache sharded along the sequence dim.
+# ---------------------------------------------------------------------------
+def _decode_local(q, k_new, v_new, ck, cv, sp, pos, *, s_total: int,
+                  window: int, softcap: float, chunk: int,
+                  seq_axes: tuple[str, ...]):
+    """Per-device decode: write the new token into the local cache shard if
+    its slot falls here, compute local flash stats, combine across shards
+    with (pmax, psum) online-softmax merging."""
+    B, S_loc = sp.shape
+    bidx = jnp.arange(B)
+    if seq_axes:
+        idx = jnp.int32(0)
+        for ax in seq_axes:
+            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        start = idx * S_loc
+    else:
+        start = jnp.int32(0)
+    slot_g = (pos % s_total).astype(jnp.int32)
+    loc = slot_g - start
+    in_range = (loc >= 0) & (loc < S_loc)
+    locc = jnp.clip(loc, 0, S_loc - 1)
+    sel = in_range[:, None, None]
+    ck = ck.at[bidx, locc].set(jnp.where(sel, k_new[:, 0], ck[bidx, locc]))
+    cv = cv.at[bidx, locc].set(jnp.where(sel, v_new[:, 0], cv[bidx, locc]))
+    sp = sp.at[bidx, locc].set(jnp.where(in_range, pos, sp[bidx, locc]))
+
+    valid = (sp >= 0) & (sp <= pos[:, None])
+    m, l, acc = flash_chunked_stats(q, ck, cv, pos[:, None], sp,
+                                    causal=True, window=window,
+                                    softcap=softcap, k_valid=valid,
+                                    chunk=chunk)
+    if seq_axes:
+        m_g = jax.lax.pmax(m, seq_axes)
+        coef = jnp.exp(m - m_g)
+        l = jax.lax.psum(l * coef, seq_axes)
+        acc = jax.lax.psum(acc * coef[..., None], seq_axes)
+        m = m_g
+    B_, _, H, hd = q.shape
+    out = _finalize(m, l, acc, B_, 1, H, hd, q.dtype)
+    return out, ck, cv, sp
+
+
+def decode_update_attend(q, k_new, v_new, ck, cv, slot_pos, pos, *,
+                         window: int = 0, softcap: float = 0.0,
+                         chunk: int = 2048, pctx=None):
+    """Write the new token's K/V into the cache and attend.
+
+    q/k_new/v_new: (B, 1, H|KV, hd); ck/cv: (B, S_cache, KV, hd);
+    slot_pos: (B, S_cache); pos: (B,).  When ``pctx`` is an enabled
+    ParallelCtx, runs under shard_map with the cache sequence dim sharded
+    over ``pctx.decode_seq_axes`` (distributed flash-decode) and the batch
+    over ``pctx.decode_batch_axes``.
+    """
+    s_total = ck.shape[1]
+    if pctx is None or not getattr(pctx, "enabled", False):
+        fn = lambda *a: _decode_local(*a, s_total=s_total, window=window,
+                                      softcap=softcap, chunk=chunk,
+                                      seq_axes=())
+        return fn(q, k_new, v_new, ck, cv, slot_pos, pos)
+
+    from jax.sharding import PartitionSpec as PS
+    b_ax = pctx.decode_batch_axes
+    s_ax = pctx.decode_seq_axes
+    b = b_ax if len(b_ax) > 1 else (b_ax[0] if b_ax else None)
+    s = s_ax if len(s_ax) > 1 else (s_ax[0] if s_ax else None)
+    qspec = PS(b, None, None, None)
+    cspec = PS(b, s, None, None)
+    pspec = PS(b, s)
+
+    fn = lambda *a: _decode_local(*a, s_total=s_total, window=window,
+                                  softcap=softcap, chunk=chunk,
+                                  seq_axes=tuple(s_ax))
+    # check_vma=False: the scan carries inside flash_chunked_stats start
+    # as invariant zeros and become device-varying in the body — legal
+    # SPMD (every collective here is explicit), but rejected by the vma
+    # type checker.
+    return jax.shard_map(
+        fn, mesh=pctx.mesh,
+        in_specs=(qspec, qspec, qspec, cspec, cspec, pspec, PS(b)),
+        out_specs=(qspec, cspec, cspec, pspec),
+        check_vma=False,
+    )(q, k_new, v_new, ck, cv, slot_pos, pos)

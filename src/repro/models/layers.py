@@ -1,0 +1,290 @@
+"""Shared model primitives: annotated params, norms, RoPE, MLPs, embeddings.
+
+Parameter convention
+--------------------
+Init functions return pytrees whose leaves are ``Ax(value, axes)`` — an array
+annotated with *logical* axis names (one per dim, ``None`` = replicated).
+``split_annotated`` separates the tree into (params, axes) once at model build
+time; ``models/sharding.py`` resolves logical names to mesh ``PartitionSpec``s.
+``Ax`` is a registered pytree so init functions compose with
+``jax.eval_shape`` (the dry-run never allocates real weights).
+
+Logical axis names: "vocab", "embed" (d_model), "heads", "kv", "mlp",
+"expert", "rnn", "inner" (xLSTM), None.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_INIT_STD = 0.02
+
+
+class Ax:
+    """A parameter annotated with logical axis names (pytree node)."""
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: tuple[str | None, ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Ax({getattr(self.value, 'shape', self.value)}, {self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Ax, lambda a: ((a.value,), a.axes), lambda axes, ch: Ax(ch[0], axes))
+
+
+def _is_ax(x):
+    return isinstance(x, Ax)
+
+
+def split_annotated(tree):
+    """-> (params_tree, axes_tree) from a tree with Ax leaves."""
+    params = jax.tree_util.tree_map(
+        lambda a: a.value if _is_ax(a) else a, tree, is_leaf=_is_ax)
+    axes = jax.tree_util.tree_map(
+        lambda a: a.axes if _is_ax(a) else None, tree, is_leaf=_is_ax)
+    return params, axes
+
+
+def stack_annotate(tree, axis_name: str = "layers"):
+    """Prefix every Ax leaf's logical axes with a leading stack axis.
+
+    ``jax.vmap`` over an init function adds a leading array dim to every
+    Ax *value* but cannot touch the static axes tuple — without this fix
+    the sharding rules zip a rank-(n+1) shape against n names and shard
+    the WRONG dimension (caught by the qwen2-72b dry-run probe: mlp.wi
+    ended replicated, 36 GB/device; see EXPERIMENTS.md §Perf)."""
+    return jax.tree_util.tree_map(
+        lambda a: Ax(a.value, (axis_name,) + a.axes) if _is_ax(a) else a,
+        tree, is_leaf=_is_ax)
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+def normal_init(key, shape, axes, *, std=DEFAULT_INIT_STD,
+                dtype=jnp.float32) -> Ax:
+    return Ax(std * jax.random.normal(key, shape, dtype), axes)
+
+
+def fanin_init(key, shape, axes, *, fan_in=None, dtype=jnp.float32) -> Ax:
+    fan = fan_in if fan_in is not None else shape[0]
+    std = fan ** -0.5
+    return Ax(std * jax.random.normal(key, shape, dtype), axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> Ax:
+    return Ax(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> Ax:
+    return Ax(jnp.ones(shape, dtype), axes)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_norm(kind: str, d: int, axes=( "embed",)) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": zeros_init((d,), axes)}        # (1 + scale) form
+    return {"scale": ones_init((d,), axes),
+            "bias": zeros_init((d,), axes)}
+
+
+def apply_norm(kind: str, p: dict, x: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(scale: jnp.ndarray, x: jnp.ndarray,
+                      eps: float = 1e-6) -> jnp.ndarray:
+    """QK-norm: RMSNorm over the last (head_dim) axis, shared scale."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale)
+    return y.astype(x.dtype)
+
+
+def group_norm(x: jnp.ndarray, n_groups: int, scale: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm over the channel axis (xLSTM blocks), no bias."""
+    *lead, d = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(*lead, d) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Dense / MLP
+# --------------------------------------------------------------------------
+def init_linear(key, d_in: int, d_out: int, axes, *, bias=False,
+                bias_axes=None) -> dict:
+    p = {"w": fanin_init(key, (d_in, d_out), axes)}
+    if bias:
+        p["b"] = zeros_init((d_out,), bias_axes or (axes[-1],))
+    return p
+
+
+def apply_linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"]
+    return y.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu,
+                                                 approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def init_gated_mlp(key, d: int, d_ff: int, *, bias=False) -> dict:
+    k1, k2 = jax.random.split(key)
+    # fused gate+up projection: (d, 2, d_ff)
+    p = {"wi": fanin_init(k1, (d, 2, d_ff), ("embed", None, "mlp"),
+                          fan_in=d),
+         "wo": fanin_init(k2, (d_ff, d), ("mlp", "embed"))}
+    if bias:
+        p["bi"] = zeros_init((2, d_ff), (None, "mlp"))
+        p["bo"] = zeros_init((d,), ("embed",))
+    return p
+
+
+def apply_gated_mlp(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = jnp.einsum("...d,dcf->...cf", x, p["wi"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if "bi" in p:
+        h = h + p["bi"]
+    gate, up = h[..., 0, :], h[..., 1, :]
+    h = (act_fn(act)(gate) * up).astype(x.dtype)
+    y = jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if "bo" in p:
+        y = y + p["bo"]
+    return y.astype(x.dtype)
+
+
+def init_plain_mlp(key, d: int, d_ff: int, *, bias=True) -> dict:
+    """Non-gated 2-layer MLP (seamless / classic transformer)."""
+    k1, k2 = jax.random.split(key)
+    p = {"wi": fanin_init(k1, (d, d_ff), ("embed", "mlp")),
+         "wo": fanin_init(k2, (d_ff, d), ("mlp", "embed"))}
+    if bias:
+        p["bi"] = zeros_init((d_ff,), ("mlp",))
+        p["bo"] = zeros_init((d,), ("embed",))
+    return p
+
+
+def apply_plain_mlp(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if "bi" in p:
+        h = h + p["bi"]
+    h = act_fn(act)(h).astype(x.dtype)
+    y = jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if "bo" in p:
+        y = y + p["bo"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embeddings
+# --------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int) -> dict:
+    # 1/sqrt(d): unit-variance activations after the (optional) sqrt(d)
+    # embed scale, and sane logits when the table is tied as the unembedding.
+    return {"table": normal_init(key, (vocab, d), ("vocab", "embed"),
+                                 std=d ** -0.5)}
+
+
+def embed_tokens(p: dict, tokens: jnp.ndarray, *, scale: bool,
+                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    x = jnp.take(p["table"], tokens, axis=0).astype(dtype)
+    if scale:
+        x = x * jnp.asarray(x.shape[-1] ** 0.5, dtype)
+    return x
+
+
+def unembed(p_head: dict | None, p_embed: dict, x: jnp.ndarray,
+            *, softcap: float = 0.0) -> jnp.ndarray:
+    table = p_head["w"] if p_head is not None else p_embed["table"].T
+    logits = jnp.einsum("...d,dv->...v", x, table.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def init_lm_head(key, d: int, vocab: int) -> dict:
+    return {"w": fanin_init(key, (d, vocab), ("embed", "vocab"))}
+
+
+# --------------------------------------------------------------------------
+# Causal temporal conv (RG-LRU / sLSTM blocks)
+# --------------------------------------------------------------------------
+def init_conv1d(width: int, d: int) -> dict:
+    return {"w": zeros_init((width, d), (None, "rnn")),
+            "b": zeros_init((d,), ("rnn",))}
+
+
+def apply_conv1d(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv over time. x: (B, S, D)."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + p["b"].astype(x.dtype)
+
+
+def conv1d_step(p: dict, buf: jnp.ndarray, x_t: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. buf: (B, width-1, D) past inputs; x_t: (B, D)."""
+    w = p["w"].astype(x_t.dtype)
+    window = jnp.concatenate([buf, x_t[:, None]], axis=1)   # (B, width, D)
+    y = jnp.einsum("bwd,wd->bd", window, w) + p["b"].astype(x_t.dtype)
+    return y, window[:, 1:]
+
+
+def softcap_logits(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(logits / cap) if cap else logits

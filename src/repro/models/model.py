@@ -1,0 +1,354 @@
+"""Full language-model assembly: embeddings + stack + losses + step fns.
+
+Public surface (all pure functions over pytrees):
+    init_lm(key, cfg)                 -> annotated param tree (Ax leaves)
+    init_cache(cfg, batch, s_cache)   -> decode cache pytree
+    loss_fn(params, batch, ...)       -> (loss, metrics)      [train fwd]
+    prefill(params, inputs, ...)      -> (last_logits, cache)
+    decode_step(params, cache, ...)   -> (logits, new_cache)
+    input_specs(cfg, shape, ...)      -> ShapeDtypeStruct stand-ins
+
+The stack layout (prefix / scanned cycles / suffix) is computed by
+``layout(cfg)``; see transformer.py for block semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.parallel import LOCAL, ParallelCtx
+
+ModelOptions = T.ModelOptions
+
+
+class StackLayout(NamedTuple):
+    prefix: tuple[str, ...]
+    cycle: tuple[str, ...]
+    n_cycles: int
+    suffix: tuple[str, ...]
+
+
+def layout(cfg: ArchConfig) -> StackLayout:
+    kinds = cfg.kinds()
+    prefix = tuple(kinds[:cfg.first_k_dense])
+    rest = kinds[cfg.first_k_dense:]
+    cyc = tuple(cfg.layer_pattern)
+    n_cycles = len(rest) // len(cyc)
+    suffix = tuple(rest[n_cycles * len(cyc):])
+    return StackLayout(prefix, cyc, n_cycles, suffix)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_stack(key, cfg: ArchConfig, lay: StackLayout, *,
+                with_cross=False) -> dict:
+    n_keys = len(lay.prefix) + len(lay.cycle) + len(lay.suffix)
+    keys = jax.random.split(key, max(n_keys, 1))
+    ki = iter(range(n_keys))
+    stack: dict = {"prefix": [], "cycle": [], "suffix": []}
+    for kind in lay.prefix:
+        stack["prefix"].append(T.init_block(keys[next(ki)], kind, cfg,
+                                            with_cross=with_cross))
+    for kind in lay.cycle:
+        slot_key = keys[next(ki)]
+        slot_keys = jax.random.split(slot_key, max(lay.n_cycles, 1))
+        stacked = jax.vmap(
+            lambda k, kind=kind: T.init_block(k, kind, cfg,
+                                              with_cross=with_cross)
+        )(slot_keys)
+        # vmap adds the layer-stack dim to values; mirror it in the
+        # logical axes so sharding rules see aligned ranks
+        stack["cycle"].append(L.stack_annotate(stacked))
+    for kind in lay.suffix:
+        stack["suffix"].append(T.init_block(keys[next(ki)], kind, cfg,
+                                            with_cross=with_cross))
+    return stack
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    ke, ks, kh, kenc = jax.random.split(key, 4)
+    lay = layout(cfg)
+    p = {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model),
+        "stack": _init_stack(ks, cfg, lay, with_cross=cfg.is_encdec),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.init_lm_head(kh, cfg.d_model, cfg.vocab_size)
+    if cfg.is_encdec:
+        enc_lay = StackLayout((), ("global",), cfg.n_encoder_layers, ())
+        p["encoder"] = _init_stack(kenc, cfg, enc_lay)
+        p["enc_norm"] = L.init_norm(cfg.norm, cfg.d_model)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    """-> (params, logical_axes) plain trees."""
+    return L.split_annotated(init_lm(key, cfg))
+
+
+def param_axes(cfg: ArchConfig):
+    """Logical axes tree via eval_shape (no allocation)."""
+    ann = jax.eval_shape(partial(init_lm, cfg=cfg),
+                         jax.random.PRNGKey(0))
+    return L.split_annotated(ann)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, s_cache: int,
+               dtype=jnp.bfloat16, s_enc: int = 0) -> dict:
+    lay = layout(cfg)
+    wc = cfg.is_encdec
+
+    def mk(kind):
+        return T.init_block_cache(kind, cfg, batch, s_cache, dtype,
+                                  with_cross=wc, s_enc=s_enc)
+    cache = {
+        "prefix": [mk(k) for k in lay.prefix],
+        "cycle": [jax.vmap(lambda _, kind=kind: mk(kind))(
+            jnp.arange(max(lay.n_cycles, 1))) for kind in lay.cycle],
+        "suffix": [mk(k) for k in lay.suffix],
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+def apply_stack(stack_p, x, *, cfg: ArchConfig, opt: ModelOptions,
+                pctx: ParallelCtx, positions, mode: str, lay: StackLayout,
+                cache=None, memory=None, causal=True, with_cross=False,
+                cache_len: int | None = None):
+    """-> (x, new_cache_or_None, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache: dict = {"prefix": [], "cycle": [], "suffix": []}
+
+    def run(kind, bp, x, c):
+        return T.apply_block(kind, bp, x, cfg, opt, pctx, positions,
+                             mode=mode, cache=c, memory=memory,
+                             causal=causal, with_cross=with_cross,
+                             cache_len=cache_len)
+
+    for j, kind in enumerate(lay.prefix):
+        c = cache["prefix"][j] if cache else None
+        x, nc, a = run(kind, stack_p["prefix"][j], x, c)
+        aux += a
+        new_cache["prefix"].append(nc)
+
+    if lay.n_cycles:
+        use_cache = cache is not None
+
+        def cycle_body(carry, xs):
+            x, aux = carry
+            slot_ps = xs[0]
+            slot_cs = xs[1] if use_cache else [None] * len(lay.cycle)
+            ncs = []
+            for j, kind in enumerate(lay.cycle):
+                x, nc, a = run(kind, slot_ps[j], x, slot_cs[j])
+                aux += a
+                ncs.append(nc)
+            ys = tuple(ncs) if any(nc is not None for nc in ncs) else None
+            return (x, aux), ys
+
+        body = cycle_body
+        if opt.remat and mode == "train":
+            body = jax.checkpoint(cycle_body, prevent_cse=False)
+        xs = (stack_p["cycle"],) + ((cache["cycle"],) if use_cache else ())
+        (x, aux), ys = jax.lax.scan(body, (x, aux), xs)
+        new_cache["cycle"] = list(ys) if ys is not None else []
+
+    for j, kind in enumerate(lay.suffix):
+        c = cache["suffix"][j] if cache else None
+        x, nc, a = run(kind, stack_p["suffix"][j],
+                       x, c)
+        aux += a
+        new_cache["suffix"].append(nc)
+
+    if mode == "train":
+        return x, None, aux
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / frontend splice
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, batch: dict, cfg: ArchConfig, opt: ModelOptions):
+    x = L.embed_tokens(params["embed"], batch["tokens"],
+                       scale=cfg.embed_scale, dtype=opt.dtype)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(opt.dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    return x
+
+
+def _logits(params, x, cfg: ArchConfig):
+    head = params.get("lm_head")
+    return L.unembed(head, params["embed"], x, softcap=cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Loss (sequence-chunked cross-entropy; logits never fully materialized)
+# ---------------------------------------------------------------------------
+def chunked_ce_loss(params, x, labels, cfg: ArchConfig, opt: ModelOptions,
+                    z_loss: float = 1e-4):
+    """x: (B,S,D) final hidden; labels (B,S) int32, -1 = masked."""
+    B, S, D = x.shape
+    c = min(opt.loss_chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = (S + pad) // c
+    xs = x.reshape(B, n_chunks, c, D).swapaxes(0, 1)
+    ls = labels.reshape(B, n_chunks, c).swapaxes(0, 1)
+
+    def chunk_loss(carry, inp):
+        xc, lc = inp
+        logits = _logits(params, xc, cfg)               # (B,c,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = lc >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        zl = jnp.where(valid, lse * lse, 0.0)
+        loss_sum, z_sum, count = carry
+        return (loss_sum + jnp.sum(nll), z_sum + jnp.sum(zl),
+                count + jnp.sum(valid)), None
+
+    (loss_sum, z_sum, count), _ = jax.lax.scan(
+        jax.checkpoint(chunk_loss, prevent_cse=False),
+        (jnp.float32(0), jnp.float32(0), jnp.int32(0)), (xs, ls))
+    denom = jnp.maximum(count, 1)
+    return loss_sum / denom + z_loss * z_sum / denom, count
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, opt: ModelOptions,
+            pctx: ParallelCtx = LOCAL):
+    """Training forward. batch: tokens/labels (+patch_embeds|frames)."""
+    lay = layout(cfg)
+    memory = None
+    if cfg.is_encdec:
+        enc_lay = StackLayout((), ("global",), cfg.n_encoder_layers, ())
+        m = batch["frames"].astype(opt.dtype)
+        pos_e = jnp.arange(m.shape[1])[None].repeat(m.shape[0], 0)
+        memory, _, _ = apply_stack(
+            params["encoder"], m, cfg=cfg, opt=opt, pctx=pctx,
+            positions=pos_e, mode="train", lay=enc_lay, causal=False)
+        memory = L.apply_norm(cfg.norm, params["enc_norm"], memory,
+                              cfg.norm_eps)
+    x = _embed_inputs(params, batch, cfg, opt)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, _, aux = apply_stack(params["stack"], x, cfg=cfg, opt=opt, pctx=pctx,
+                            positions=positions, mode="train", lay=lay,
+                            memory=memory, with_cross=cfg.is_encdec)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    ce, count = chunked_ce_loss(params, x, batch["labels"], cfg, opt)
+    aux_w = cfg.moe.aux_loss_weight if cfg.moe else 0.0
+    loss = ce + aux_w * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+def prefill(params, batch: dict, cfg: ArchConfig, opt: ModelOptions,
+            pctx: ParallelCtx = LOCAL, cache_len: int | None = None):
+    """Forward over the prompt; returns (last_token_logits, cache).
+
+    ``cache_len`` sets the decode-cache capacity (>= prompt length); the
+    dry-run prefill cells use the prompt length itself."""
+    lay = layout(cfg)
+    memory = None
+    if cfg.is_encdec:
+        enc_lay = StackLayout((), ("global",), cfg.n_encoder_layers, ())
+        m = batch["frames"].astype(opt.dtype)
+        pos_e = jnp.arange(m.shape[1])[None].repeat(m.shape[0], 0)
+        memory, _, _ = apply_stack(
+            params["encoder"], m, cfg=cfg, opt=opt, pctx=pctx,
+            positions=pos_e, mode="train", lay=enc_lay, causal=False)
+        memory = L.apply_norm(cfg.norm, params["enc_norm"], memory,
+                              cfg.norm_eps)
+    x = _embed_inputs(params, batch, cfg, opt)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, cache, _ = apply_stack(params["stack"], x, cfg=cfg, opt=opt,
+                              pctx=pctx, positions=positions, mode="prefill",
+                              lay=lay, memory=memory,
+                              with_cross=cfg.is_encdec, cache_len=cache_len)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, x[:, -1:], cfg)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, opt: ModelOptions,
+                pctx: ParallelCtx = LOCAL):
+    """One token for every sequence. tokens: (B, 1) -> (logits, cache)."""
+    lay = layout(cfg)
+    pos = cache["pos"]                                   # (B,)
+    x = L.embed_tokens(params["embed"], tokens, scale=cfg.embed_scale,
+                       dtype=opt.dtype)
+    positions = pos[:, None]
+    x, new_cache, _ = apply_stack(params["stack"], x, cfg=cfg, opt=opt,
+                                  pctx=pctx, positions=positions,
+                                  mode="decode", lay=lay, cache=cache,
+                                  with_cross=cfg.is_encdec)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, x, cfg)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins for the dry-run)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeConfig | str,
+                opt: ModelOptions | None = None) -> dict:
+    """Stand-ins for every model input of the given shape cell."""
+    opt = opt or ModelOptions()
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            batch = {"frames": sds((B, S // 2, cfg.d_model), opt.dtype),
+                     "tokens": sds((B, S // 2), i32),
+                     "labels": sds((B, S // 2), i32)}
+        else:
+            batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+            if cfg.frontend == "vision":
+                batch["patch_embeds"] = sds(
+                    (B, cfg.n_frontend_tokens, cfg.d_model), opt.dtype)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            batch = {"frames": sds((B, S // 2, cfg.d_model), opt.dtype),
+                     "tokens": sds((B, S // 2), i32)}
+        else:
+            batch = {"tokens": sds((B, S), i32)}
+            if cfg.frontend == "vision":
+                batch["patch_embeds"] = sds(
+                    (B, cfg.n_frontend_tokens, cfg.d_model), opt.dtype)
+        return {"batch": batch}
+
+    # decode: one new token against an S-long cache
+    s_enc = 1024 if cfg.is_encdec else 0
+    cache = jax.eval_shape(
+        partial(init_cache, cfg, B, S, opt.dtype, s_enc))
+    return {"tokens": sds((B, 1), i32), "cache": cache}

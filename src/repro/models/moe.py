@@ -1,0 +1,153 @@
+"""Mixture-of-Experts layer with explicit expert parallelism.
+
+Routing is token-choice top-k with a fixed per-expert capacity (sort-free:
+the slot of a token inside its expert's buffer is its running rank, computed
+with one cumsum).  Expert weights are sharded over the ``model`` mesh axis;
+activations enter replicated across ``model`` (the TP layout), so expert
+parallelism needs **no all_to_all**: every model shard dispatches the tokens
+routed to *its* experts from its replicated copy, computes the grouped GEMM
+for E/tp experts, and one ``psum`` over ``model`` combines the outputs —
+the same single collective a dense TP FFN needs.
+
+FLOP accounting is honest: compute = E_local x C x (6 D F) per device with
+C ~= T_local * top_k / E * capacity_factor (the active-parameter FLOPs, not
+the dense E-times blowup).
+
+Two call paths share all math:
+  * ``pctx.enabled`` -> ``shard_map`` over the mesh (dry-run / production),
+  * otherwise        -> single-device (CPU tests; E_local = E, no psum).
+
+The grouped GEMM itself also exists as a Pallas TPU kernel
+(repro/kernels/grouped_matmul.py) that additionally skips padded capacity
+rows; the XLA path uses a plain batched einsum.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+from repro.models.parallel import ParallelCtx
+
+
+def init_moe(key, d: int, mcfg: MoEConfig) -> dict:
+    kr, ki, ko, ks = jax.random.split(key, 4)
+    E, F = mcfg.n_experts, mcfg.d_ff_expert
+    p = {
+        "router": L.fanin_init(kr, (d, E), ("embed", None)),
+        "w_in": L.fanin_init(ki, (E, d, 2, F), ("expert", "embed", None,
+                                                None), fan_in=d),
+        "w_out": L.fanin_init(ko, (E, F, d), ("expert", None, "embed"),
+                              fan_in=F),
+    }
+    if mcfg.n_shared:
+        p["shared"] = L.init_gated_mlp(ks, d,
+                                       mcfg.d_ff_shared * mcfg.n_shared)
+    return p
+
+
+def capacity(n_tokens: int, mcfg: MoEConfig) -> int:
+    c = math.ceil(n_tokens * mcfg.top_k / mcfg.n_experts
+                  * mcfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def load_balance_loss(probs: jnp.ndarray, top_e: jnp.ndarray,
+                      n_experts: int) -> jnp.ndarray:
+    """Switch-style aux loss: E * sum_e f_e * P_e (fp32 scalar)."""
+    T = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(T * top_e.shape[-1], 1)
+    p = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+def _moe_local(x, router_w, w_in, w_out, *, mcfg: MoEConfig,
+               act: str, model_axis: str | None, norm_topk: bool,
+               aux_axes: tuple[str, ...] = ()):
+    """Per-device MoE math. x: (B_loc, S, D); w_in: (E_loc, D, 2, F)."""
+    B, S, D = x.shape
+    T = B * S
+    E, k = mcfg.n_experts, mcfg.top_k
+    E_loc = w_in.shape[0]
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf, router_w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E) f32
+    top_p, top_e = jax.lax.top_k(probs, k)                      # (T, k)
+    if norm_topk:
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    aux = load_balance_loss(probs, top_e, E)
+
+    mi = jax.lax.axis_index(model_axis) if model_axis else 0
+    e_start = mi * E_loc
+
+    # flatten (token, k) pairs, keep only pairs routed to local experts
+    pe = top_e.reshape(-1)                                      # (T*k,)
+    pp = top_p.reshape(-1).astype(jnp.float32)
+    ptok = jnp.repeat(jnp.arange(T), k)
+    le = pe - e_start
+    is_local = (le >= 0) & (le < E_loc)
+    onehot = (is_local[:, None]
+              & (le[:, None] == jnp.arange(E_loc)[None, :]))    # (T*k, E_loc)
+    rank = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    rank = jnp.take_along_axis(rank, jnp.clip(le, 0, E_loc - 1)[:, None],
+                               axis=1)[:, 0]
+    C = capacity(T, mcfg)
+    keep = is_local & (rank < C)
+    slot = jnp.where(keep, le * C + rank, E_loc * C)            # OOB -> drop
+
+    buf = jnp.zeros((E_loc * C, D), x.dtype).at[slot].set(
+        xf[ptok], mode="drop")
+    buf = buf.reshape(E_loc, C, D)
+    h = jnp.einsum("ecd,edgf->ecgf", buf, w_in.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    h = (L.act_fn(act)(h[..., 0, :]) * h[..., 1, :]).astype(x.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, w_out.astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    y = y.reshape(E_loc * C, D)
+
+    # combine: weighted scatter-add back to token positions
+    contrib = jnp.where(keep, pp, 0.0)[:, None].astype(x.dtype) \
+        * y[jnp.clip(slot, 0, E_loc * C - 1)]
+    out = jnp.zeros((T, D), x.dtype).at[ptok].add(
+        jnp.where(keep[:, None], contrib, 0))
+    if model_axis is not None:
+        out = jax.lax.psum(out, model_axis)
+        if aux_axes:
+            # aux is data-varying only (router weights are replicated);
+            # averaging over the batch axes leaves a replicated scalar
+            aux = jax.lax.pmean(aux, aux_axes)
+    return out.reshape(B, S, D), aux
+
+
+def apply_moe(p: dict, x: jnp.ndarray, mcfg: MoEConfig, act: str,
+              pctx: ParallelCtx, *, norm_topk: bool = True
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    if pctx.enabled:
+        batch = pctx.batch_axes if pctx.batch_axes else None
+        xspec = PS(batch, None, None)
+        fn = partial(_moe_local, mcfg=mcfg, act=act,
+                     model_axis=pctx.model_axis, norm_topk=norm_topk,
+                     aux_axes=tuple(pctx.batch_axes))
+        y, aux = jax.shard_map(
+            fn, mesh=pctx.mesh,
+            in_specs=(xspec, PS(),
+                      PS(pctx.model_axis, None, None, None),
+                      PS(pctx.model_axis, None, None)),
+            out_specs=(xspec, PS()),
+        )(x, p["router"], p["w_in"], p["w_out"])
+    else:
+        y, aux = _moe_local(x, p["router"], p["w_in"], p["w_out"],
+                            mcfg=mcfg, act=act, model_axis=None,
+                            norm_topk=norm_topk)
+    if "shared" in p:
+        y = y + L.apply_gated_mlp(p["shared"], x, act)
+    return y, aux

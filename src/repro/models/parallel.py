@@ -1,0 +1,51 @@
+"""Parallelism context threaded through model apply functions.
+
+Carries the mesh axis names so layers that need *explicit* collectives
+(MoE expert parallelism, distributed flash-decode) can use ``shard_map``;
+``ParallelCtx(None)`` is the single-device path used by CPU tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    mesh: object | None = None                 # jax.sharding.Mesh
+    batch_axes: tuple[str, ...] = ()           # e.g. ("data",) or ("pod","data")
+    model_axis: str | None = None              # e.g. "model"
+    # decode-cache layout (distributed flash-decode):
+    decode_batch_axes: tuple[str, ...] = ()
+    decode_seq_axes: tuple[str, ...] = ()
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None and self.model_axis is not None
+
+    @property
+    def model_size(self) -> int:
+        if not self.enabled:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+LOCAL = ParallelCtx()
+
+
+def make_ctx(mesh, *, decode_batch: int | None = None) -> ParallelCtx:
+    import numpy as np
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data"))
+    model = "model" if "model" in names else None
+    db: tuple[str, ...] = ()
+    ds: tuple[str, ...] = ()
+    if decode_batch is not None:
+        d_size = int(np.prod([mesh.shape[a] for a in batch])) if batch else 1
+        if batch and decode_batch % d_size == 0 and decode_batch >= d_size:
+            db, ds = batch, ((model,) if model else ())
+        else:
+            db, ds = (), batch + ((model,) if model else ())
+    return ParallelCtx(mesh=mesh, batch_axes=batch, model_axis=model,
+                       decode_batch_axes=db, decode_seq_axes=ds)

@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (the Griffin "recurrent block"):
+    x -> [linear -> temporal conv(4) -> RG-LRU]  (recurrent branch)
+      -> [linear -> GeLU]                        (gate branch)
+    y = branch_rec * branch_gate -> linear out
+
+RG-LRU cell (per channel):
+    r_t = sigmoid(W_a x_t + b_a)           recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)           input gate
+    a_t = exp(c * r_t * -softplus(Lambda))  in (0,1),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill use ``jax.lax.associative_scan`` over time (h_t = a h + b is
+associative); decode carries (h, conv buffer) in the layer cache.  The
+recurrence is elementwise in the channel dim, so the state shards cleanly
+over the ``model`` axis ("rnn" logical axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+C_FACTOR = 8.0
+
+
+def init_rglru_block(key, d: int, d_rnn: int, conv_width: int) -> dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "in_rec": L.fanin_init(k1, (d, d_rnn), ("embed", "rnn")),
+        "in_gate": L.fanin_init(k2, (d, d_rnn), ("embed", "rnn")),
+        "conv": L.init_conv1d(conv_width, d_rnn),
+        # gate matrices: output dim = recurrence channel -> shard outputs
+        "w_a": L.fanin_init(k3, (d_rnn, d_rnn), (None, "rnn")),
+        "b_a": L.zeros_init((d_rnn,), ("rnn",)),
+        "w_x": L.fanin_init(k4, (d_rnn, d_rnn), (None, "rnn")),
+        "b_x": L.zeros_init((d_rnn,), ("rnn",)),
+        # Lambda init so a^c spreads over ~(0.9, 0.999) as in the paper
+        "lam": Ax_lambda(k5, d_rnn),
+        "out": L.fanin_init(k6, (d_rnn, d), ("rnn", "embed")),
+    }
+
+
+def Ax_lambda(key, d_rnn: int) -> L.Ax:
+    u = jax.random.uniform(key, (d_rnn,), jnp.float32, 0.9, 0.999)
+    # softplus(lam) = -log(a_max) / c  =>  lam = softplus^-1(...)
+    target = -jnp.log(u) / C_FACTOR
+    lam = jnp.log(jnp.expm1(target))
+    return L.Ax(lam, ("rnn",))
+
+
+def _gates(p: dict, x: jnp.ndarray):
+    """x: (..., d_rnn) conv output -> (log_a, b) for the linear recurrence."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -C_FACTOR * r * jax.nn.softplus(p["lam"])        # (..., d_rnn)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(p: dict, x: jnp.ndarray, h0: jnp.ndarray | None = None
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Parallel form over time.  x: (B, S, d_rnn) -> (y, h_last)."""
+    a, b = _gates(p, x)                                      # (B,S,D) f32
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(p: dict, x_t: jnp.ndarray, h: jnp.ndarray
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. x_t: (B, d_rnn); h: (B, d_rnn) f32."""
+    a, b = _gates(p, x_t)
+    h_new = a * h.astype(jnp.float32) + b
+    return h_new.astype(x_t.dtype), h_new
+
+
+def apply_rglru_block(p: dict, x: jnp.ndarray, act: str = "gelu",
+                      h0: jnp.ndarray | None = None):
+    """Train/prefill. x: (B, S, D) -> (y, h_last)."""
+    rec = L.apply_linear({"w": p["in_rec"]}, x)
+    gate = L.apply_linear({"w": p["in_gate"]}, x)
+    rec = L.apply_conv1d(p["conv"], rec)
+    rec, h_last = rglru_scan(p, rec, h0)
+    y = rec * L.act_fn(act)(gate.astype(jnp.float32)).astype(x.dtype)
+    return L.apply_linear({"w": p["out"]}, y), h_last
+
+
+def apply_rglru_block_step(p: dict, x_t: jnp.ndarray, cache: dict,
+                           act: str = "gelu"):
+    """Decode step. x_t: (B, 1, D); cache: {"h": (B,Dr) f32,
+    "conv": (B, w-1, Dr)} -> (y (B,1,D), new_cache)."""
+    xt = x_t[:, 0]
+    rec = jnp.einsum("bd,df->bf", xt, p["in_rec"].astype(xt.dtype))
+    gate = jnp.einsum("bd,df->bf", xt, p["in_gate"].astype(xt.dtype))
+    rec, conv_buf = L.conv1d_step(p["conv"], cache["conv"], rec)
+    rec, h = rglru_step(p, rec, cache["h"])
+    y = rec * L.act_fn(act)(gate.astype(jnp.float32)).astype(xt.dtype)
+    y = jnp.einsum("bf,fd->bd", y, p["out"].astype(xt.dtype))
+    return y[:, None], {"h": h, "conv": conv_buf}
+
+
+def init_rglru_cache(batch: int, d_rnn: int, conv_width: int,
+                     dtype=jnp.bfloat16) -> dict:
+    return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype)}

@@ -1,0 +1,156 @@
+"""Logical-axis -> mesh PartitionSpec resolution.
+
+Baseline scheme (Megatron-style TP x DP, MoE experts on the TP axis):
+
+  logical axis   mesh axis
+  vocab/heads/kv/mlp/expert/rnn/inner -> "model"   (iff dim divisible)
+  embed (d_model)                     -> replicated
+  batch                               -> ("pod","data") / ("data",)
+
+Non-divisible dims fall back to replicated instead of GSPMD padding — the
+waste then shows up honestly in the roofline table (and is a hillclimb
+target, see EXPERIMENTS.md §Perf).
+
+ZeRO-1: optimizer moments additionally shard their first replicated,
+divisible dim over the data axes (update sharding; XLA inserts
+reduce-scatter + all-gather around the update).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+MODEL_AXES = ("vocab", "heads", "kv", "mlp", "expert", "rnn", "inner")
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def model_axis(mesh: Mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def spec_for_param(shape: tuple[int, ...], axes: tuple[str | None, ...],
+                   mesh: Mesh) -> PS:
+    """Resolve one parameter's logical axes to a PartitionSpec."""
+    m_ax = model_axis(mesh)
+    m_size = mesh.shape[m_ax] if m_ax else 1
+    axes = tuple(axes) if axes else (None,) * len(shape)
+    if len(axes) < len(shape):
+        # defensive: un-annotated leading stack dims (vmapped init)
+        axes = (None,) * (len(shape) - len(axes)) + axes
+    dims = []
+    used_model = False
+    for size, name in zip(shape, axes):
+        if (name in MODEL_AXES and not used_model and m_ax
+                and size % m_size == 0):
+            dims.append(m_ax)
+            used_model = True
+        else:
+            dims.append(None)
+    return PS(*dims)
+
+
+def param_specs(shapes_tree, axes_tree, mesh: Mesh):
+    """Trees of ShapeDtypeStruct x logical-axes -> tree of PartitionSpec."""
+    return jax.tree_util.tree_map(
+        lambda s, a: spec_for_param(s.shape, a, mesh), shapes_tree,
+        axes_tree, is_leaf=lambda x: x is None or isinstance(x, tuple))
+
+
+def zero1_spec(spec: PS, shape: tuple[int, ...], mesh: Mesh) -> PS:
+    """Extend a param spec for optimizer moments: shard the first
+    replicated divisible dim over the data axes (ZeRO-1).  Idempotent:
+    a spec that already uses a data axis (FSDP params) is returned
+    unchanged — mapping a mesh axis twice is illegal."""
+    dax = data_axes(mesh)
+    if not dax:
+        return spec
+    used = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(ax)
+    if used & set(dax):
+        return spec
+    d_size = int(np.prod([mesh.shape[a] for a in dax]))
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (size, cur) in enumerate(zip(shape, dims)):
+        if cur is None and size % d_size == 0 and size >= d_size:
+            dims[i] = dax if len(dax) > 1 else dax[0]
+            return PS(*dims)
+    return spec
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> PS:
+    dax = data_axes(mesh)
+    first = dax if len(dax) > 1 else (dax[0] if dax else None)
+    return PS(first, *([None] * extra_dims))
+
+
+def seq_shard_axes(mesh: Mesh, batch: int) -> tuple[tuple[str, ...],
+                                                    tuple[str, ...]]:
+    """(batch_axes, seq_axes) for decode caches.
+
+    If the batch divides the data axes, shard batch over data and the cache
+    sequence over model; tiny batches (long-context B=1) shard the sequence
+    over everything instead.
+    """
+    dax = data_axes(mesh)
+    m_ax = model_axis(mesh)
+    d_size = int(np.prod([mesh.shape[a] for a in dax])) if dax else 1
+    if batch % d_size == 0 and batch >= d_size:
+        return dax, (m_ax,) if m_ax else ()
+    return (), dax + ((m_ax,) if m_ax else ())
+
+
+def cache_specs(cache_tree, mesh: Mesh, batch: int):
+    """PartitionSpecs for a decode cache pytree.
+
+    KV/ring caches (k, v, slot_pos) shard their slot dim; recurrent states
+    (rank >= 2 with channel last) shard batch over data and channels over
+    model when divisible.
+    """
+    b_ax, s_ax = seq_shard_axes(mesh, batch)
+    bspec = (b_ax if len(b_ax) > 1 else (b_ax[0] if b_ax else None))
+    sspec = (s_ax if len(s_ax) > 1 else (s_ax[0] if s_ax else None))
+    m_ax = model_axis(mesh)
+    m_size = mesh.shape[m_ax] if m_ax else 1
+
+    def leaf_spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = leaf.ndim
+        # caches under the scanned "cycle" stacks carry a leading
+        # layer-stack dim that is never sharded
+        stacked = any(getattr(p, "key", None) == "cycle" for p in path)
+        lead = (None,) if stacked else ()
+        base = nd - len(lead)
+        if name in ("k", "v"):
+            return PS(*lead, bspec, sspec, *([None] * (base - 2)))
+        if name == "slot_pos":
+            return PS(*lead, bspec, sspec)
+        if name in ("ck", "cv"):           # encoder memory: batch only
+            return PS(*lead, bspec, *([None] * (base - 1)))
+        if name == "pos":
+            return PS(bspec)
+        if name in ("h", "c", "n", "m", "C", "conv"):
+            # recurrent state: batch over data, channel dim over model
+            dims = list(lead) + [bspec] + [None] * (base - 1)
+            if base >= 2 and leaf.shape[-1] % m_size == 0 and m_ax:
+                dims[-1] = m_ax
+            return PS(*dims)
+        return PS(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  spec_tree,
+                                  is_leaf=lambda x: isinstance(x, PS))

@@ -1,0 +1,396 @@
+"""Block definitions and the scan-over-layers stack.
+
+The stack is organised as ``prefix blocks + scanned cycles + suffix blocks``:
+the layer pattern (e.g. gemma3's 5 local : 1 global) forms one *cycle*; all
+cycles have identical structure so they run under a single ``lax.scan`` with
+stacked parameters — HLO size is constant in depth (94-layer models lower as
+fast as 2-layer ones).  Remainder layers that don't fill a whole cycle are
+applied unrolled (prefix for ``first_k_dense``, suffix for the tail).
+
+Every block kind has a fused (train/prefill) path and a single-token decode
+path with an explicit cache entry:
+
+  kind        cache entry
+  global      {k, v: (B, S_cache, KV, hd), slot_pos: (B, S_cache)}
+  local       ring buffer of min(window, S_cache) slots (same fields)
+  rec         {h: (B, d_rnn) f32, conv: (B, w-1, d_rnn)}
+  mlstm       {C, n, m, conv}
+  slstm       {c, n, m, h, conv}
+  moe/dense_ffn   same as global (attention part)
+  cross-attn  {ck, cv: (B, S_enc, KV, hd)} (precomputed at prefill)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as ATT
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+from repro.models.parallel import ParallelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    """Runtime (non-architecture) options."""
+    attn_impl: str = "chunked"       # chunked | hier | pallas
+    kv_chunk: int = 1024
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+    loss_chunk: int = 512            # CE loss sequence chunking
+
+
+ATTN_KINDS = ("global", "local", "moe", "dense_ffn")
+
+
+def _rope_theta(cfg: ArchConfig, kind: str) -> float:
+    if kind == "local" and cfg.rope_theta_local:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-layer
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ArchConfig, *, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": L.fanin_init(kq, (d, H, hd), ("embed", "heads", None),
+                           fan_in=d),
+        "wk": L.fanin_init(kk, (d, KV, hd), ("embed", "kv", None), fan_in=d),
+        "wv": L.fanin_init(kv, (d, KV, hd), ("embed", "kv", None), fan_in=d),
+        "wo": L.fanin_init(ko, (H, hd, d), ("heads", None, "embed"),
+                           fan_in=H * hd),
+    }
+    if cfg.attn_bias:
+        p["bq"] = L.zeros_init((H, hd), ("heads", None))
+        p["bk"] = L.zeros_init((KV, hd), ("kv", None))
+        p["bv"] = L.zeros_init((KV, hd), ("kv", None))
+    if cfg.qk_norm and not cross:
+        p["qn"] = L.zeros_init((cfg.hd,), (None,))
+        p["kn"] = L.zeros_init((cfg.hd,), (None,))
+    return p
+
+
+def _project_qkv(p, x, x_kv=None):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "qn" in p:
+        q = L.rms_norm_headwise(p["qn"], q)
+        k = L.rms_norm_headwise(p["kn"], k)
+    return q, k, v
+
+
+def _out_proj(p, o, dtype):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dtype),
+                      preferred_element_type=jnp.float32).astype(dtype)
+
+
+def apply_attention(p, x, cfg: ArchConfig, opt: ModelOptions, kind: str,
+                    positions, *, causal: bool = True, cache=None,
+                    mode: str = "train", pctx: ParallelCtx | None = None,
+                    cache_len: int | None = None):
+    """Full attention sub-layer.  Returns (y, new_cache)."""
+    theta = _rope_theta(cfg, kind)
+    window = cfg.window if kind == "local" else 0
+
+    if mode == "decode":
+        q, k_new, v_new = _project_qkv(p, x)            # (B,1,H/KV,hd)
+        pos = positions[:, 0]                           # (B,)
+        q = L.apply_rope(q, positions, theta)
+        k_new = L.apply_rope(k_new, positions, theta)
+        o, k, v, slot_pos = ATT.decode_update_attend(
+            q, k_new, v_new, cache["k"], cache["v"], cache["slot_pos"],
+            pos, window=window, softcap=cfg.attn_softcap,
+            chunk=opt.kv_chunk, pctx=pctx)
+        return _out_proj(p, o, x.dtype), {"k": k, "v": v,
+                                          "slot_pos": slot_pos}
+
+    q, k, v = _project_qkv(p, x)
+    q = L.apply_rope(q, positions, theta)
+    k = L.apply_rope(k, positions, theta)
+    k_cache, v_cache = k, v                  # GQA layout kept for the cache
+    G = cfg.n_heads // cfg.n_kv_heads
+    if G > 1:
+        # repeat KV to full heads: attention then shards cleanly over H on
+        # the model axis (cache stays GQA-sized; see DESIGN.md)
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    if kind == "local" and causal:
+        o = ATT.sliding_window_attention(q, k, v, positions, window=window,
+                                         softcap=cfg.attn_softcap)
+    elif causal and opt.attn_impl == "hier" and q.shape[1] > opt.kv_chunk:
+        o = ATT.hierarchical_causal(q, k, v, softcap=cfg.attn_softcap,
+                                    base_chunk=opt.kv_chunk)
+    elif causal and opt.attn_impl == "block" \
+            and q.shape[1] % opt.kv_chunk == 0 \
+            and q.shape[1] > opt.kv_chunk:
+        o = ATT.block_causal(q, k, v, softcap=cfg.attn_softcap,
+                             chunk=opt.kv_chunk)
+    else:
+        kpos = positions if positions.ndim == 1 else positions
+        o = ATT.flash_chunked(q, k, v, positions, kpos, causal=causal,
+                              window=window, softcap=cfg.attn_softcap,
+                              chunk=opt.kv_chunk)
+    y = _out_proj(p, o, x.dtype)
+
+    new_cache = None
+    if mode == "prefill":
+        B, S = x.shape[0], x.shape[1]
+        cl = max(cache_len or S, S)
+        ring = min(window, cl) if window else cl
+        # place positions max(0, S-ring)..S-1 at slot (pos % ring)
+        n_keep = min(ring, S)
+        pos_keep = jnp.arange(S - n_keep, S)
+        slots = pos_keep % ring
+        KVh, hd = k_cache.shape[2], k_cache.shape[3]
+        kbuf = jnp.zeros((B, ring, KVh, hd), k_cache.dtype)
+        vbuf = jnp.zeros_like(kbuf)
+        spbuf = jnp.full((B, ring), -1, jnp.int32)
+        kbuf = kbuf.at[:, slots].set(k_cache[:, pos_keep])
+        vbuf = vbuf.at[:, slots].set(v_cache[:, pos_keep])
+        spbuf = spbuf.at[:, slots].set(jnp.broadcast_to(pos_keep,
+                                                        (B, n_keep)))
+        new_cache = {"k": kbuf, "v": vbuf, "slot_pos": spbuf}
+    return y, new_cache
+
+
+def apply_cross_attention(p, x, memory_kv, cfg, opt, *, mode="train"):
+    """memory_kv: (k, v) precomputed from encoder output."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"]
+    mk, mv = memory_kv
+    if mk.shape[2] != q.shape[2]:
+        g = q.shape[2] // mk.shape[2]
+        mk = jnp.repeat(mk, g, axis=2)
+        mv = jnp.repeat(mv, g, axis=2)
+    S_enc = mk.shape[1]
+    o = ATT.flash_chunked(q, mk, mv, jnp.zeros((x.shape[0], x.shape[1]),
+                                               jnp.int32),
+                          jnp.zeros((S_enc,), jnp.int32), causal=False,
+                          chunk=opt.kv_chunk)
+    return _out_proj(p, o, x.dtype)
+
+
+def project_memory_kv(p, memory, cfg):
+    """Compute cross-attention K/V from encoder memory (no RoPE)."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(memory.dtype),
+                   preferred_element_type=jnp.float32).astype(memory.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(memory.dtype),
+                   preferred_element_type=jnp.float32).astype(memory.dtype)
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def init_block(key, kind: str, cfg: ArchConfig, *, with_cross=False) -> dict:
+    ks = jax.random.split(key, 6)
+    nrm = lambda: L.init_norm(cfg.norm, cfg.d_model)
+    p: dict = {}
+    if kind in ATTN_KINDS:
+        p["ln1"] = nrm()
+        p["attn"] = init_attention(ks[0], cfg)
+        if cfg.post_norms:
+            p["ln1b"] = nrm()
+            p["ln2b"] = nrm()
+        if not cfg.parallel_block:
+            p["ln2"] = nrm()
+        if kind == "moe":
+            p["moe"] = MOE.init_moe(ks[1], cfg.d_model, cfg.moe)
+        elif kind == "dense_ffn":
+            p["mlp"] = L.init_gated_mlp(ks[1], cfg.d_model, cfg.d_ff_dense)
+        elif cfg.mlp_act in ("silu", "gelu") and not cfg.is_encdec:
+            p["mlp"] = L.init_gated_mlp(ks[1], cfg.d_model, cfg.d_ff)
+        else:
+            p["mlp"] = L.init_plain_mlp(ks[1], cfg.d_model, cfg.d_ff)
+        if with_cross:
+            p["ln_cross"] = nrm()
+            p["cross"] = init_attention(ks[2], cfg, cross=True)
+    elif kind == "rec":
+        p["ln1"] = nrm()
+        p["rec"] = RG.init_rglru_block(ks[0], cfg.d_model, cfg.d_rnn,
+                                       cfg.conv_width)
+        p["ln2"] = nrm()
+        p["mlp"] = L.init_gated_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    elif kind == "mlstm":
+        p["ln1"] = nrm()
+        p["cell"] = XL.init_mlstm_block(ks[0], cfg.d_model, cfg.n_heads,
+                                        cfg.mlstm_proj_factor,
+                                        cfg.conv_width)
+    elif kind == "slstm":
+        p["ln1"] = nrm()
+        p["cell"] = XL.init_slstm_block(ks[0], cfg.d_model, cfg.n_heads,
+                                        cfg.conv_width)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p
+
+
+def init_block_cache(kind: str, cfg: ArchConfig, batch: int, s_cache: int,
+                     dtype, *, with_cross=False, s_enc: int = 0) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    c: dict = {}
+    if kind in ATTN_KINDS:
+        size = min(cfg.window, s_cache) if kind == "local" else s_cache
+        c = {"k": jnp.zeros((batch, size, KV, hd), dtype),
+             "v": jnp.zeros((batch, size, KV, hd), dtype),
+             "slot_pos": jnp.full((batch, size), -1, jnp.int32)}
+        if with_cross:
+            c["ck"] = jnp.zeros((batch, s_enc, KV, hd), dtype)
+            c["cv"] = jnp.zeros((batch, s_enc, KV, hd), dtype)
+    elif kind == "rec":
+        c = RG.init_rglru_cache(batch, cfg.d_rnn, cfg.conv_width, dtype)
+    elif kind == "mlstm":
+        c = XL.init_mlstm_cache(batch, cfg.d_model, cfg.n_heads,
+                                cfg.mlstm_proj_factor, cfg.conv_width, dtype)
+    elif kind == "slstm":
+        c = XL.init_slstm_cache(batch, cfg.d_model, cfg.conv_width, dtype)
+    return c
+
+
+def apply_block(kind: str, p: dict, x, cfg: ArchConfig, opt: ModelOptions,
+                pctx: ParallelCtx, positions, *, mode: str, cache=None,
+                memory=None, causal: bool = True, with_cross: bool = False,
+                cache_len: int | None = None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    eps = cfg.norm_eps
+    nrm = lambda pp, xx: L.apply_norm(cfg.norm, pp, xx, eps)
+
+    if kind in ATTN_KINDS:
+        h = nrm(p["ln1"], x)
+        attn_out, new_cache = apply_attention(
+            p["attn"], h, cfg, opt, kind, positions, causal=causal,
+            cache=cache, mode=mode, pctx=pctx, cache_len=cache_len)
+        if cfg.post_norms:
+            attn_out = nrm(p["ln1b"], attn_out)
+        if cfg.parallel_block:
+            mlp_out = _apply_ffn(kind, p, h, cfg, opt, pctx)
+            if isinstance(mlp_out, tuple):
+                mlp_out, aux = mlp_out
+            x = x + attn_out + mlp_out
+        else:
+            x = x + attn_out
+            if with_cross:                               # enc-dec cross-attn
+                hc = nrm(p["ln_cross"], x)
+                if mode == "decode":
+                    mkv = (cache["ck"], cache["cv"])
+                else:
+                    mkv = project_memory_kv(p["cross"], memory, cfg)
+                    if mode == "prefill":
+                        new_cache = dict(new_cache or {})
+                        new_cache["ck"], new_cache["cv"] = mkv
+                x = x + apply_cross_attention(p["cross"], hc, mkv, cfg, opt,
+                                              mode=mode)
+            h2 = nrm(p["ln2"], x)
+            mlp_out = _apply_ffn(kind, p, h2, cfg, opt, pctx)
+            if isinstance(mlp_out, tuple):
+                mlp_out, aux = mlp_out
+            if cfg.post_norms:
+                mlp_out = nrm(p["ln2b"], mlp_out)
+            x = x + mlp_out
+        if mode == "decode" and with_cross:
+            new_cache = dict(new_cache or {})
+            new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+        return x, new_cache, aux
+
+    if kind == "rec":
+        h = nrm(p["ln1"], x)
+        if mode == "decode":
+            y, new_cache = RG.apply_rglru_block_step(p["rec"], h, cache,
+                                                     cfg.mlp_act)
+        else:
+            y, h_last = RG.apply_rglru_block(p["rec"], h, cfg.mlp_act)
+            new_cache = None
+            if mode == "prefill":
+                buf_w = cfg.conv_width - 1
+                rec_in = L.apply_linear({"w": p["rec"]["in_rec"]}, h)
+                new_cache = {"h": h_last,
+                             "conv": rec_in[:, -buf_w:]}
+        x = x + y
+        h2 = nrm(p["ln2"], x)
+        x = x + L.apply_gated_mlp(p["mlp"], h2, cfg.mlp_act)
+        return x, new_cache, aux
+
+    if kind in ("mlstm", "slstm"):
+        h = nrm(p["ln1"], x)
+        if mode == "decode":
+            fn = (XL.apply_mlstm_block_step if kind == "mlstm"
+                  else XL.apply_slstm_block_step)
+            y, new_cache = fn(p["cell"], h, cache, cfg.n_heads)
+            return x + y, new_cache, aux
+        if kind == "mlstm":
+            y = XL.apply_mlstm_block(p["cell"], h, cfg.n_heads)
+            new_cache = _mlstm_prefill_cache(p["cell"], h, cfg) \
+                if mode == "prefill" else None
+        else:
+            y, state = XL.apply_slstm_block(p["cell"], h, cfg.n_heads)
+            new_cache = None
+            if mode == "prefill":
+                conv_in = h[:, -(cfg.conv_width - 1):]
+                new_cache = {"c": state[0], "n": state[1], "m": state[2],
+                             "h": state[3], "conv": conv_in}
+        return x + y, new_cache, aux
+
+    raise ValueError(kind)
+
+
+def _apply_ffn(kind, p, h, cfg, opt, pctx):
+    if kind == "moe":
+        norm_topk = cfg.moe.n_shared == 0      # qwen3 normalizes, deepseek no
+        return MOE.apply_moe(p["moe"], h, cfg.moe, cfg.mlp_act, pctx,
+                             norm_topk=norm_topk)
+    if "wi" in p["mlp"] and p["mlp"]["wi"].ndim == 3:
+        return L.apply_gated_mlp(p["mlp"], h, cfg.mlp_act)
+    return L.apply_plain_mlp(p["mlp"], h, cfg.mlp_act)
+
+
+def _mlstm_prefill_cache(pc, h, cfg: ArchConfig):
+    """Run the recurrence over the prompt to produce the decode cache.
+
+    The parallel form doesn't expose (C, n, m); we recompute them with a
+    cheap scan over time of rank-1 updates (linear in S).
+    """
+    xi = jnp.einsum("bsd,df->bsf", h, pc["up_x"].astype(h.dtype))
+    q, k, v, li, lf = XL._mlstm_qkvif(pc, xi)
+    B, S, di = k.shape
+    H = cfg.n_heads
+    dh = di // H
+    kh = k.reshape(B, S, H, dh).astype(jnp.float32)
+    vh = v.reshape(B, S, H, dh).astype(jnp.float32)
+
+    def step(carry, t):
+        C, n, m = carry
+        m_new = jnp.maximum(lf[:, t] + m, li[:, t])
+        i_p = jnp.exp(li[:, t] - m_new)
+        f_p = jnp.exp(lf[:, t] + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] \
+            * vh[:, t, :, :, None] * kh[:, t, :, None, :]
+        n = f_p[..., None] * n + i_p[..., None] * kh[:, t]
+        return (C, n, m_new), None
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (C, n, m), _ = jax.lax.scan(step, (C0, n0, m0), jnp.arange(S))
+    conv_in = xi[:, -(cfg.conv_width - 1):]
+    return {"C": C, "n": n, "m": m, "conv": conv_in}

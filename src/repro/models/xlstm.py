@@ -1,0 +1,253 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM cell (per head, head dims d_k = d_v = d_inner / H):
+    i_t = exp(~i_t), f_t = exp(~f_t) (or sigmoid), stabilized by m_t:
+      m_t = max(log f_t + m_{t-1}, log i_t)
+      i'  = exp(log i_t - m_t);  f' = exp(log f_t + m_{t-1} - m_t)
+    C_t = f' C_{t-1} + i' v_t k_t^T          (d_v x d_k matrix memory)
+    n_t = f' n_{t-1} + i' k_t
+    h_t = o_t * (C_t q_t) / max(|n_t . q_t|, 1)
+
+Train/prefill use the *parallel* (attention-like) form from the paper —
+a masked quadratic gate matrix D built from cumulative log-f gates; decode
+steps the recurrence with (C, n, m) carried in the cache.  The matrix memory
+shards over the model axis on the d_v rows ("inner" logical axis).
+
+sLSTM is strictly sequential (real recurrent h_{t-1} -> gates), so
+train/prefill run a ``lax.scan`` over time; its state is (c, n, m, h).
+
+Block wiring follows the paper: mLSTM block = pre-LN -> up-proj (factor 2,
+x & gate paths) -> causal conv4 feeding q/k -> cell -> GroupNorm ->
+gated by silu(gate path) -> down-proj.  sLSTM block = pre-LN -> conv4 ->
+4-head cell -> GroupNorm -> gated FFN (factor 4/3).  Neither uses an
+external FFN (d_ff = 0 in the assigned config).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm_block(key, d: int, n_heads: int, proj_factor: float,
+                     conv_width: int) -> dict:
+    di = int(d * proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_x": L.fanin_init(ks[0], (d, di), ("embed", "inner")),
+        "up_g": L.fanin_init(ks[1], (d, di), ("embed", "inner")),
+        "conv": L.init_conv1d(conv_width, di),
+        "wq": L.fanin_init(ks[2], (di, di), ("inner", None)),
+        "wk": L.fanin_init(ks[3], (di, di), ("inner", None)),
+        "wv": L.fanin_init(ks[4], (di, di), ("inner", None)),
+        "wi": L.fanin_init(ks[5], (di, n_heads), ("inner", None)),
+        "bi": L.zeros_init((n_heads,), (None,)),
+        "wf": L.fanin_init(ks[6], (di, n_heads), ("inner", None)),
+        "bf": L.Ax(jnp.linspace(3.0, 6.0, n_heads), (None,)),  # slow forget
+        "gn": L.ones_init((di,), ("inner",)),
+        "down": L.fanin_init(ks[7], (di, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_qkvif(p, x):
+    """x: (B, S, di) -> q,k,v (B,S,H,dh), log i/f (B,S,H)  [f32 gates]."""
+    conv_x = jax.nn.silu(L.apply_conv1d(p["conv"], x).astype(jnp.float32)
+                         ).astype(x.dtype)
+    q = jnp.einsum("bsd,df->bsf", conv_x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,df->bsf", conv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"].astype(x.dtype))
+    xf = x.astype(jnp.float32)
+    log_i = xf @ p["wi"].astype(jnp.float32) + p["bi"]          # (B,S,H)
+    log_f = jax.nn.log_sigmoid(xf @ p["wf"].astype(jnp.float32) + p["bf"])
+    return q, k, v, log_i, log_f
+
+
+def mlstm_parallel(q, k, v, log_i, log_f, n_heads: int):
+    """Stabilized parallel form. q/k/v: (B,S,di); gates (B,S,H) -> (B,S,di)."""
+    B, S, di = q.shape
+    H = n_heads
+    dh = di // H
+    scale = dh ** -0.5
+    qh = q.reshape(B, S, H, dh).transpose(0, 2, 1, 3)           # B,H,S,dh
+    kh = k.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    vh = v.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    li = log_i.transpose(0, 2, 1)                               # B,H,S
+    lf = log_f.transpose(0, 2, 1)
+
+    F = jnp.cumsum(lf, axis=-1)                                 # log prod f
+    # log gate matrix: D[t,s] = F_t - F_s + li_s  for s <= t
+    logD = F[..., :, None] - F[..., None, :] + li[..., None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(mask, logD, -jnp.inf)
+    m = jnp.max(logD, axis=-1)                                  # (B,H,S)
+    D = jnp.exp(logD - m[..., None])                            # (B,H,S,S)
+
+    logits = jnp.einsum("bhtd,bhsd->bhts", qh, kh,
+                        preferred_element_type=jnp.float32) * scale
+    w = logits * D
+    n = jnp.abs(jnp.einsum("bhts,bhs->bht", w,
+                           jnp.ones_like(F)))                   # |sum w|
+    n = jnp.maximum(n, jnp.exp(-m))
+    h = jnp.einsum("bhts,bhsd->bhtd", (w / n[..., None]).astype(vh.dtype),
+                   vh, preferred_element_type=jnp.float32)
+    return h.transpose(0, 2, 1, 3).reshape(B, S, di), (m, F)
+
+
+def mlstm_step(q_t, k_t, v_t, log_i_t, log_f_t, cache, n_heads: int):
+    """One decode step. q/k/v_t: (B,di); gates (B,H);
+    cache = {"C": (B,H,dh,dh) f32, "n": (B,H,dh) f32, "m": (B,H) f32}."""
+    B, di = q_t.shape
+    H = n_heads
+    dh = di // H
+    scale = dh ** -0.5
+    qh = q_t.reshape(B, H, dh).astype(jnp.float32) * scale
+    kh = k_t.reshape(B, H, dh).astype(jnp.float32)
+    vh = v_t.reshape(B, H, dh).astype(jnp.float32)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(log_f_t + m, log_i_t)                   # (B,H)
+    i_p = jnp.exp(log_i_t - m_new)
+    f_p = jnp.exp(log_f_t + m - m_new)
+    C_new = f_p[..., None, None] * C \
+        + i_p[..., None, None] * vh[..., :, None] * kh[..., None, :]
+    n_new = f_p[..., None] * n + i_p[..., None] * kh
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, qh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qh)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.reshape(B, di), {"C": C_new, "n": n_new, "m": m_new}
+
+
+def apply_mlstm_block(p: dict, x: jnp.ndarray, n_heads: int):
+    """Train/prefill. x: (B,S,D) (already normed) -> (B,S,D)."""
+    xi = jnp.einsum("bsd,df->bsf", x, p["up_x"].astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, p["up_g"].astype(x.dtype))
+    q, k, v, li, lf = _mlstm_qkvif(p, xi)
+    h, _ = mlstm_parallel(q, k, v, li, lf, n_heads)
+    h = L.group_norm(h.astype(x.dtype), n_heads, p["gn"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["down"].astype(x.dtype))
+
+
+def apply_mlstm_block_step(p: dict, x_t: jnp.ndarray, cache: dict,
+                           n_heads: int):
+    """Decode. x_t: (B,1,D); cache also holds the conv ring buffer."""
+    xt = x_t[:, 0]
+    xi = jnp.einsum("bd,df->bf", xt, p["up_x"].astype(xt.dtype))
+    g = jnp.einsum("bd,df->bf", xt, p["up_g"].astype(xt.dtype))
+    conv_y, conv_buf = L.conv1d_step(p["conv"], cache["conv"], xi)
+    conv_y = jax.nn.silu(conv_y.astype(jnp.float32)).astype(xt.dtype)
+    q = jnp.einsum("bf,fg->bg", conv_y, p["wq"].astype(xt.dtype))
+    k = jnp.einsum("bf,fg->bg", conv_y, p["wk"].astype(xt.dtype))
+    v = jnp.einsum("bf,fg->bg", xi, p["wv"].astype(xt.dtype))
+    xif = xi.astype(jnp.float32)
+    li = xif @ p["wi"].astype(jnp.float32) + p["bi"]
+    lf = jax.nn.log_sigmoid(xif @ p["wf"].astype(jnp.float32) + p["bf"])
+    h, cell = mlstm_step(q, k, v, li, lf, cache, n_heads)
+    h = L.group_norm(h.astype(xt.dtype), n_heads, p["gn"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(xt.dtype)
+    y = jnp.einsum("bf,fd->bd", h, p["down"].astype(xt.dtype))
+    return y[:, None], {**cell, "conv": conv_buf}
+
+
+def init_mlstm_cache(batch: int, d: int, n_heads: int, proj_factor: float,
+                     conv_width: int, dtype=jnp.bfloat16) -> dict:
+    di = int(d * proj_factor)
+    dh = di // n_heads
+    return {"C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+            "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, di), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm_block(key, d: int, n_heads: int, conv_width: int) -> dict:
+    ks = jax.random.split(key, 10)
+    dh = d // n_heads
+
+    def head_mat(k):  # block-diagonal recurrent weights: per-head (dh, dh)
+        return L.Ax(dh ** -0.5 * jax.random.normal(k, (n_heads, dh, dh)),
+                    (None, None, None))
+    p = {"conv": L.init_conv1d(conv_width, d), "gn": L.ones_init((d,),
+                                                                 ("embed",))}
+    for name, kk in zip(("z", "i", "f", "o"), ks[:4]):
+        p[f"w_{name}"] = L.fanin_init(kk, (d, d), ("embed", None))
+        p[f"b_{name}"] = L.zeros_init((d,), (None,))
+    for name, kk in zip(("z", "i", "f", "o"), ks[4:8]):
+        p[f"r_{name}"] = head_mat(kk)
+    p["b_f_init"] = L.Ax(jnp.linspace(3.0, 6.0, d), (None,))
+    p["out"] = L.fanin_init(ks[8], (d, d), (None, "embed"))
+    return p
+
+
+def slstm_cell(p, x_t, state, n_heads: int):
+    """x_t: (B, d) conv output; state = (c, n, m, h) each (B, d) f32."""
+    c, n, m, h = state
+    B, d = x_t.shape
+    dh = d // n_heads
+    hf = h.reshape(B, n_heads, dh)
+
+    def rec(name):
+        return jnp.einsum("bhk,hkl->bhl", hf,
+                          p[f"r_{name}"]).reshape(B, d)
+    xf = x_t.astype(jnp.float32)
+    z = jnp.tanh(xf @ p["w_z"] + p["b_z"] + rec("z"))
+    lo = xf @ p["w_o"] + p["b_o"] + rec("o")
+    li = xf @ p["w_i"] + p["b_i"] + rec("i")
+    lf = jax.nn.log_sigmoid(xf @ p["w_f"] + p["b_f"] + p["b_f_init"]
+                            + rec("f"))
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(lo) * c_new / jnp.maximum(n_new, 1.0)
+    return c_new, n_new, m_new, h_new
+
+
+def apply_slstm_block(p: dict, x: jnp.ndarray, n_heads: int,
+                      state: tuple | None = None):
+    """Train/prefill: sequential scan over S. x: (B,S,D) -> (B,S,D)."""
+    B, S, d = x.shape
+    xc = jax.nn.silu(L.apply_conv1d(p["conv"], x).astype(jnp.float32)
+                     ).astype(x.dtype)
+    if state is None:
+        state = init_slstm_state(B, d)
+
+    def step(carry, x_t):
+        new = slstm_cell(p, x_t, carry, n_heads)
+        return new, new[3]
+
+    state, hs = jax.lax.scan(step, state, xc.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)                  # (B,S,d)
+    hs = L.group_norm(hs, n_heads, p["gn"])
+    return jnp.einsum("bsd,df->bsf", hs, p["out"].astype(x.dtype)), state
+
+
+def apply_slstm_block_step(p: dict, x_t: jnp.ndarray, cache: dict,
+                           n_heads: int):
+    xt = x_t[:, 0]
+    conv_y, conv_buf = L.conv1d_step(p["conv"], cache["conv"], xt)
+    conv_y = jax.nn.silu(conv_y.astype(jnp.float32)).astype(xt.dtype)
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, h = slstm_cell(p, conv_y, state, n_heads)
+    y = L.group_norm(h.astype(xt.dtype), n_heads, p["gn"])
+    y = jnp.einsum("bd,df->bf", y, p["out"].astype(xt.dtype))
+    return y[:, None], {"c": c, "n": n, "m": m, "h": h, "conv": conv_buf}
+
+
+def init_slstm_state(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, jnp.full((batch, d), -1e30, jnp.float32), z)
+
+
+def init_slstm_cache(batch: int, d: int, conv_width: int,
+                     dtype=jnp.bfloat16) -> dict:
+    c, n, m, h = init_slstm_state(batch, d)
+    return {"c": c, "n": n, "m": m, "h": h,
+            "conv": jnp.zeros((batch, conv_width - 1, d), dtype)}

@@ -1,0 +1,11 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm, opt_state_specs)
+from repro.optim.schedule import warmup_cosine
+from repro.optim.compression import (CompressionState, compress_init,
+                                     compress_decompress, quantize_int8,
+                                     dequantize_int8)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "opt_state_specs", "warmup_cosine", "CompressionState",
+           "compress_init", "compress_decompress", "quantize_int8",
+           "dequantize_int8"]

@@ -1,0 +1,83 @@
+"""Int8 gradient compression with error feedback.
+
+For multi-pod training the cross-pod (DCN) gradient all-reduce is the
+bandwidth-critical collective: DCN is ~10x slower per chip than ICI.  The
+standard mitigation is quantized all-reduce with *error feedback* (residual
+accumulation), which keeps SGD/Adam convergence (Karimireddy et al., 2019)
+while cutting DCN bytes 4x vs bf16.
+
+The quantizer is per-leaf symmetric int8 with an fp32 scale:
+    q = round(clip(g / s, -127, 127)),  s = max|g| / 127
+Error feedback carries ``g - dequant(q)`` into the next step.
+
+Wiring (launch/train.py, ``--grad-compression``): grads are computed per
+pod under GSPMD (XLA all-reduces over the in-pod "data" axis on ICI), the
+int8 psum over the "pod" axis is issued explicitly inside a ``shard_map``
+whose other axes stay auto — so only the DCN hop is compressed.
+
+Subtlety: inside a partial-manual ``shard_map`` over "pod", ``jax.grad``
+w.r.t. a pod-*unvarying* param tree transposes the implicit broadcast into
+an fp32 psum — exactly the collective we want to avoid.  The params must
+first be made pod-varying (``jax.lax.pcast(w, to='varying')``) so the
+grads stay pod-local until the int8 psum (validated in
+tests/test_train.py::test_compressed_grads_match).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any          # error-feedback accumulator, same tree as grads
+
+
+def compress_init(grads_or_shapes) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), grads_or_shapes))
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8 payload, fp32 scale). Zero tensors quantize losslessly."""
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, state: CompressionState, *,
+                        psum_axis: str | None = None):
+    """Quantize (grads + residual); optionally psum the int8 payload over
+    ``psum_axis`` (the cross-pod hop); dequantize; update the residual.
+
+    Returns (reduced_grads_fp32, new_state).  With ``psum_axis=None`` this
+    is the single-host roundtrip used by the unit/property tests.
+    """
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = quantize_int8(target)
+        if psum_axis is not None:
+            n = jax.lax.psum(1, psum_axis)
+            # int8 payloads sum in int32 (no overflow for <= 2^24 pods),
+            # scales average; the reconstruction is sum_i s_i q_i ~= sum g_i
+            qsum = jax.lax.psum(q.astype(jnp.int32), psum_axis)
+            ssum = jax.lax.psum(s, psum_axis) / n
+            out = qsum.astype(jnp.float32) * ssum / n
+        else:
+            out = dequantize_int8(q, s)
+        new_r = target - dequantize_int8(q, s)
+        return out, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    out = treedef.unflatten([p[0] for p in pairs])
+    res = treedef.unflatten([p[1] for p in pairs])
+    return out, CompressionState(residual=res)

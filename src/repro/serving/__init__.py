@@ -1,0 +1,4 @@
+from repro.serving.engine import (AppSpec, ServeConfig, ServingEngine,
+                                  ServeReport)
+
+__all__ = ["AppSpec", "ServeConfig", "ServingEngine", "ServeReport"]

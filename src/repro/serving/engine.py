@@ -1,0 +1,200 @@
+"""E2C-scheduled LM serving — the paper's FELARE [12] use-case, executable.
+
+The serving engine is the E2C pipeline with *real work* behind the
+machines:
+
+  requests (workload trace) -> batch queue -> E2C scheduling policy
+    -> machine (TPU slice pool) queues -> execution -> completed /
+    cancelled / missed pools + energy accounting.
+
+* A **machine** is a slice pool of some machine type (e.g. "v5e-256",
+  "v4-128"); its EET column comes from the compiled-roofline calibration
+  (``benchmarks/eet_from_roofline.py``) or a measured table.
+* A **task type** is an application: (architecture x shape cell, decode
+  length) — e.g. "qwen2-1.5b chat 128 tok".
+* The scheduling policy is any entry of ``core.schedulers.SCHEDULERS``
+  (shared, bit-identical semantics with the simulator: the host loop
+  subclasses the reference engine whose equivalence to the vectorized JAX
+  engine is property-tested).
+* ``run_mode="real"`` actually generates tokens with a reduced-config
+  model on this host (prefill + greedy decode via models/model.py);
+  virtual time still advances by the EET so schedule/energy semantics stay
+  those of the calibrated cluster, while outputs are real.
+
+This is deliberately an *online* engine: decisions are made event-by-event
+with no lookahead, exactly like a production request router.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import ref_engine as R
+from repro.core import state as S
+from repro.core.eet import EETTable
+from repro.core.workload import Workload
+
+
+@dataclass
+class AppSpec:
+    """One task type: an application served by the cluster."""
+    name: str
+    gen_len: int = 16                       # tokens to decode per request
+    arch: Any = None                        # ArchConfig (reduced) | None
+    params: Any = None                      # model params for run_mode=real
+    prompt_len: int = 16
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    policy: str = "ee_mct"
+    lcap: int = 4
+    qcap: int = 1 << 30
+    cancel_infeasible: bool = True
+    run_mode: str = "sim"                   # sim | real
+
+
+@dataclass
+class ServeReport:
+    n_requests: int
+    completed: int
+    cancelled: int
+    missed: int
+    makespan: float
+    active_energy: float
+    idle_energy: float
+    mean_response: float
+    p99_response: float
+    tokens_generated: int
+    wall_seconds: float
+    per_machine_util: np.ndarray
+
+    @property
+    def total_energy(self) -> float:
+        return self.active_energy + self.idle_energy
+
+    @property
+    def slo_attainment(self) -> float:
+        return self.completed / max(self.n_requests, 1)
+
+    def row(self) -> dict:
+        return {"completed": self.completed, "cancelled": self.cancelled,
+                "missed": self.missed,
+                "slo": round(self.slo_attainment, 4),
+                "makespan_s": round(self.makespan, 3),
+                "energy_J": round(self.total_energy, 1),
+                "mean_resp_s": round(self.mean_response, 4),
+                "p99_resp_s": round(self.p99_response, 4),
+                "tokens": self.tokens_generated}
+
+
+class _ServeSim(R._Sim):
+    """Reference-engine subclass with an execution hook on task start."""
+
+    def __init__(self, *args, on_start: Callable[[int, int, float], None],
+                 **kw):
+        super().__init__(*args, **kw)
+        self._on_start = on_start
+
+    def start_tasks(self):
+        for m in range(len(self.mtype)):
+            if self.running[m] < 0:
+                queue = self.queue_of(m)
+                if queue:
+                    t = queue[0]
+                    self.status[t] = S.RUNNING
+                    self.t_start[t] = self.time
+                    self.busy_until[m] = self.time + self.exec_time(t, m)
+                    self.running[m] = t
+                    self._on_start(t, m, self.time)
+
+
+class ServingEngine:
+    """Online E2C-scheduled serving over a heterogeneous slice cluster."""
+
+    def __init__(self, eet: EETTable | np.ndarray, power: np.ndarray,
+                 machine_types: list[int] | np.ndarray,
+                 apps: list[AppSpec], cfg: ServeConfig = ServeConfig()):
+        self.eet = eet.eet if isinstance(eet, EETTable) else np.asarray(eet)
+        self.power = np.asarray(power, np.float64)
+        self.mtype = np.asarray(machine_types, np.int64)
+        self.apps = apps
+        self.cfg = cfg
+        if self.eet.shape[0] != len(apps):
+            raise ValueError(f"EET has {self.eet.shape[0]} task types but "
+                             f"{len(apps)} apps were given")
+        self.tokens_generated = 0
+        self.outputs: dict[int, np.ndarray] = {}
+        self._decode_fns: dict[int, Any] = {}
+
+    # ---- real execution --------------------------------------------------
+    def _execute(self, task: int, type_id: int, machine: int):
+        app = self.apps[type_id]
+        if self.cfg.run_mode != "real" or app.arch is None:
+            self.tokens_generated += app.gen_len
+            return
+        import jax
+        import jax.numpy as jnp
+        from repro.models import model as M
+        from repro.models.transformer import ModelOptions
+        opt = ModelOptions(dtype=jnp.float32, remat=False)
+        cfg = app.arch
+        if type_id not in self._decode_fns:
+            def step(params, cache, tok):
+                return M.decode_step(params, cache, tok, cfg, opt)
+            self._decode_fns[type_id] = jax.jit(step)
+        rng = np.random.default_rng(task)
+        prompt = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (1, app.prompt_len)), jnp.int32)
+        logits, cache = M.prefill(app.params, {"tokens": prompt}, cfg, opt,
+                                  cache_len=app.prompt_len + app.gen_len)
+        toks = []
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        for _ in range(app.gen_len):
+            toks.append(int(tok[0, 0]))
+            logits, cache = self._decode_fns[type_id](app.params, cache, tok)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        self.outputs[task] = np.asarray(toks, np.int32)
+        self.tokens_generated += app.gen_len
+
+    # ---- main entry --------------------------------------------------------
+    def run(self, requests: Workload) -> ServeReport:
+        t0 = time.perf_counter()
+        cfg = self.cfg
+
+        def on_start(task, machine, t):
+            self._execute(task, int(requests.type_id[task]), machine)
+
+        sim = _ServeSim(
+            np.asarray(requests.arrival, np.float64),
+            np.asarray(requests.type_id, np.int64),
+            np.asarray(requests.deadline, np.float64),
+            np.asarray(self.eet, np.float64), self.power, self.mtype,
+            np.ones(requests.n_tasks), cfg.policy, cfg.lcap, cfg.qcap,
+            cfg.cancel_infeasible, on_start=on_start)
+        res = sim.run()
+        wall = time.perf_counter() - t0
+
+        done = res.status == S.COMPLETED
+        resp = (res.t_end - requests.arrival)[done]
+        makespan = res.makespan
+        idle = ((makespan - res.active_time).clip(min=0)
+                * self.power[self.mtype, 0]).sum()
+        return ServeReport(
+            n_requests=requests.n_tasks,
+            completed=int(done.sum()),
+            cancelled=int((res.status == S.CANCELLED).sum()),
+            missed=int(((res.status == S.MISSED_QUEUE)
+                        | (res.status == S.MISSED_RUNNING)).sum()),
+            makespan=float(makespan),
+            active_energy=float(res.active_energy.sum()),
+            idle_energy=float(idle),
+            mean_response=float(resp.mean()) if resp.size else 0.0,
+            p99_response=float(np.percentile(resp, 99)) if resp.size else 0.0,
+            tokens_generated=self.tokens_generated,
+            wall_seconds=wall,
+            per_machine_util=res.active_time / max(makespan, 1e-9),
+        )

@@ -1,0 +1,10 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see
+# the host's single real device; only launch/dryrun.py forces 512
+# placeholder devices (in its own process).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+For each of the 10 assigned architectures: one forward/train step with
+shape + finiteness asserts, and prefill+decode consistency — decoding
+token-by-token after a prefill must reproduce the full-context forward
+logits (the strongest cheap correctness check a cache path can get).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, list_archs
+from repro.models import model as M
+from repro.models.transformer import ModelOptions
+
+ARCHS = list_archs()
+OPT = ModelOptions(dtype=jnp.float32, remat=False)
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (B, S))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+    batch["labels"] = jnp.concatenate(
+        [batch["tokens"][:, 1:], jnp.full((B, 1), -1, jnp.int32)], axis=1)
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, S // 2, cfg.d_model)), jnp.float32)
+        batch["tokens"] = batch["tokens"][:, :S // 2]
+        batch["labels"] = batch["labels"][:, :S // 2]
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_finite(arch):
+    cfg = get_arch(arch).tiny()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    loss, mets = M.loss_fn(params, batch, cfg, OPT)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    assert float(loss) > 0
+    assert int(mets["tokens"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_reduces_loss(arch):
+    """Two SGD steps on one batch must reduce the loss (gradients flow
+    through every block type)."""
+    cfg = get_arch(arch).tiny()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, B=2, S=16)
+
+    @jax.jit
+    def step(p):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: M.loss_fn(p, batch, cfg, OPT), has_aux=True)(p)
+        p = jax.tree.map(lambda w, gw: w - 0.5 * gw, p, g)
+        return p, loss
+
+    losses = []
+    for _ in range(3):
+        params, loss = step(params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"{arch}: loss did not decrease {losses}"
+    assert all(np.isfinite(losses))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    """logits(prefill(x[:n]) -> decode x[n:]) == logits(full forward)."""
+    cfg = get_arch(arch).tiny()
+    params, _ = M.init_params(jax.random.PRNGKey(1), cfg)
+    B, S, n_dec = 2, 24, 4
+    batch = make_batch(cfg, B=B, S=S, seed=3)
+    toks = batch["tokens"]
+    Sd = toks.shape[1]
+
+    pf_batch = {k: v for k, v in batch.items() if k != "labels"}
+    pf_batch["tokens"] = toks[:, :Sd - n_dec]
+    logits, cache = M.prefill(params, pf_batch, cfg, OPT, cache_len=Sd)
+    got = [logits[:, -1]]
+    for i in range(Sd - n_dec, Sd - 1):
+        step_logits, cache = M.decode_step(params, cache, toks[:, i:i + 1],
+                                           cfg, OPT)
+        got.append(step_logits[:, -1])
+    got = jnp.stack(got, axis=1)              # (B, n_dec, V)
+
+    # oracle: fresh full-context prefills ending at each decoded position
+    want = []
+    for k in range(Sd - n_dec, Sd + 1 - 1):
+        fb = dict(pf_batch)
+        fb["tokens"] = toks[:, :k]
+        wl, _ = M.prefill(params, fb, cfg, OPT, cache_len=Sd)
+        want.append(wl[:, -1])
+    want = jnp.stack(want, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3,
+                               err_msg=f"{arch}: decode != full forward")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyper-parameters."""
+    cfg = get_arch(arch)
+    expected = {
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.moe.d_ff_expert if cfg.moe and arch != "deepseek-moe-16b"
+           else cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+def test_moe_configs():
+    ds = get_arch("deepseek-moe-16b")
+    assert ds.moe.n_experts == 64 and ds.moe.top_k == 6
+    assert ds.moe.n_shared == 2
+    q3 = get_arch("qwen3-moe-235b-a22b")
+    assert q3.moe.n_experts == 128 and q3.moe.top_k == 8
+    assert q3.moe.d_ff_expert == 1536
+
+
+def test_param_counts_plausible():
+    """Sanity: computed parameter counts are near the nameplate sizes."""
+    approx = {
+        "qwen2-72b": 72e9, "gemma3-12b": 12e9, "command-r-35b": 35e9,
+        "qwen2-1.5b": 1.5e9, "recurrentgemma-2b": 2.7e9,
+        "xlstm-350m": 0.35e9, "deepseek-moe-16b": 16e9,
+        "qwen3-moe-235b-a22b": 235e9, "phi-3-vision-4.2b": 3.8e9,
+        "seamless-m4t-large-v2": 1.4e9,
+    }
+    for arch, want in approx.items():
+        got = get_arch(arch).n_params()
+        assert 0.5 * want < got < 1.7 * want, \
+            f"{arch}: n_params {got/1e9:.2f}B vs nameplate {want/1e9:.1f}B"
+
+
+def test_long_context_eligibility():
+    eligible = {a for a in ARCHS
+                if get_arch(a).supports_long_context()}
+    assert eligible == {"gemma3-12b", "recurrentgemma-2b", "xlstm-350m"}, \
+        f"long_500k set changed: {eligible}"

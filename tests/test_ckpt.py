@@ -1,0 +1,74 @@
+"""Checkpoint layer: atomicity, keep-N GC, resume, crash tolerance."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointManager, latest_step, load_checkpoint,
+                        save_checkpoint)
+
+
+def tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "opt": [jnp.zeros(3), jnp.ones((2, 2))]}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 5, t, extra={"step": 5, "data_step": 2})
+    out, extra = load_checkpoint(str(tmp_path), t)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    assert extra == {"step": 5, "data_step": 2}
+
+
+def test_latest_and_gc(tmp_path):
+    t = tree()
+    for s in (10, 20, 30, 40):
+        save_checkpoint(str(tmp_path), s, t, keep=2)
+    assert latest_step(str(tmp_path)) == 40
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_30", "step_40"]
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 10, t)
+    # simulate a crash mid-save: step dir without manifest
+    broken = tmp_path / "step_20"
+    broken.mkdir()
+    (broken / "leaf_00000.npy").write_bytes(b"garbage")
+    assert latest_step(str(tmp_path)) == 10
+    out, _ = load_checkpoint(str(tmp_path), t)
+    assert np.isfinite(np.asarray(out["params"]["w"])).all()
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, tree())
+    with pytest.raises(ValueError, match="leaves"):
+        load_checkpoint(str(tmp_path), {"just": jnp.zeros(1)})
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError, match="shape"):
+        load_checkpoint(str(tmp_path), {"w": jnp.zeros((3, 3))})
+
+
+def test_manager_cadence(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, save_every=50)
+    assert not mgr.should_save(0)
+    assert mgr.should_save(50)
+    assert not mgr.should_save(51)
+    mgr.save(50, tree(), extra={"step": 50, "data_step": 50})
+    assert mgr.latest == 50
+
+
+def test_orphan_tmp_dirs_cleaned(tmp_path):
+    (tmp_path / "tmp.99.orphan").mkdir()
+    save_checkpoint(str(tmp_path), 1, tree())
+    assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))

@@ -1,0 +1,101 @@
+"""EET matrix + workload component tests (paper Fig. 2 features)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.eet import (EETTable, eet_from_roofline, homogeneous_eet,
+                            load_eet_csv, save_eet_csv, synth_eet,
+                            validate_eet)
+from repro.core.workload import (bursty_workload, load_workload_csv,
+                                 poisson_workload, save_workload_csv,
+                                 uniform_workload)
+
+
+def test_eet_csv_roundtrip(tmp_path):
+    t = synth_eet(3, 4, seed=1)
+    p = str(tmp_path / "eet.csv")
+    save_eet_csv(t, p)
+    t2 = load_eet_csv(p)
+    np.testing.assert_allclose(t.eet, t2.eet, rtol=1e-4)
+    assert t2.machine_types == t.machine_types
+
+
+def test_eet_csv_text_form():
+    text = "task_type,cpu,gpu\nobj_det,3.2,0.9\nspeech,5.0,1.1\n"
+    t = load_eet_csv(text)
+    assert t.task_types == ["obj_det", "speech"]
+    assert t.machine_types == ["cpu", "gpu"]
+    assert t.eet.shape == (2, 2)
+    assert t.eet[0, 1] == np.float32(0.9)
+
+
+@pytest.mark.parametrize("bad", [
+    np.zeros((2, 2)),                       # zero times
+    -np.ones((2, 2)),                       # negative
+    np.full((2, 2), np.inf),                # non-finite
+])
+def test_validate_eet_rejects(bad):
+    with pytest.raises(ValueError):
+        validate_eet(bad.astype(np.float32))
+
+
+def test_homogeneous_columns_identical():
+    t = homogeneous_eet(4, 3, seed=2)
+    for j in range(1, 3):
+        np.testing.assert_array_equal(t.eet[:, 0], t.eet[:, j])
+
+
+@settings(max_examples=10, deadline=None)
+@given(inc=st.floats(0.0, 1.0))
+def test_synth_eet_valid(inc):
+    t = synth_eet(3, 3, inconsistency=inc, seed=0)
+    validate_eet(t.eet)
+
+
+def test_consistent_eet_machine_order():
+    """inconsistency=0 -> machine ranking identical for every task type."""
+    t = synth_eet(5, 4, inconsistency=0.0, seed=3)
+    orders = [tuple(np.argsort(row)) for row in t.eet]
+    assert len(set(orders)) == 1
+
+
+def test_eet_from_roofline():
+    rows = {"a": {"flops": 1e12, "bytes": 1e9},
+            "b": {"flops": 4e12, "bytes": 8e9}}
+    specs = {"fast": {"flops_per_s": 1e12, "hbm_bw": 1e9},
+             "slow": {"flops_per_s": 0.5e12, "hbm_bw": 0.5e9}}
+    t = eet_from_roofline(rows, specs)
+    assert t.eet.shape == (2, 2)
+    # roofline max(compute, memory): task a on fast = max(1, 1) = 1s
+    np.testing.assert_allclose(t.eet[0, 0], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(t.eet[0, 1], 2.0, rtol=1e-5)
+
+
+def test_workload_generators_sorted_and_sized():
+    for wl in (poisson_workload(50, 2.0, 3, seed=1),
+               uniform_workload(50, 20.0, 3, seed=1),
+               bursty_workload(50, 2.0, 3, seed=1)):
+        assert wl.n_tasks == 50
+        assert (np.diff(wl.arrival) >= 0).all()
+        assert (wl.deadline >= wl.arrival).all()
+        assert wl.type_id.min() >= 0 and wl.type_id.max() < 3
+
+
+def test_workload_csv_roundtrip(tmp_path):
+    wl = poisson_workload(20, 3.0, 2, seed=4)
+    p = str(tmp_path / "trace.csv")
+    save_workload_csv(wl, p)
+    wl2 = load_workload_csv(p)
+    np.testing.assert_allclose(wl.arrival, wl2.arrival, rtol=1e-5)
+    np.testing.assert_array_equal(wl.type_id, wl2.type_id)
+
+
+def test_workload_csv_named_types_and_missing_deadlines():
+    text = ("task_id,task_type,arrival_time\n"
+            "0,obj_det,0.5\n1,speech,1.0\n2,obj_det,1.5\n")
+    wl = load_workload_csv(text, n_task_types=2, slack=2.0)
+    assert wl.n_tasks == 3
+    assert set(wl.type_id.tolist()) == {0, 1}
+    assert (wl.deadline > wl.arrival).all()

@@ -1,0 +1,72 @@
+"""Report/metrics layer tests + energy-accounting invariants."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine as E
+from repro.core import report as R
+from repro.core import state as S
+from repro.core.eet import EETTable, synth_eet
+from repro.core.workload import poisson_workload
+
+
+def run(seed=0, policy="mct", n=24, m=3):
+    eet = synth_eet(3, 2, seed=seed)
+    power = np.array([[10., 80.], [20., 120.]], np.float32)
+    wl = poisson_workload(n, rate=2.0, n_task_types=3,
+                          mean_eet=eet.eet.mean(1), slack=4.0, seed=seed)
+    mtype = [0, 1, 0][:m]
+    stt = E.simulate(wl, eet, power, mtype, policy=policy)
+    tables = E.make_tables(eet, power, wl.n_tasks)
+    return stt, tables, wl
+
+
+def test_report_counts_sum_to_n():
+    stt, tables, wl = run()
+    rep = R.metrics(stt, tables)
+    assert (rep.completed + rep.cancelled + rep.missed_queue
+            + rep.missed_running) == rep.n_tasks
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_energy_invariants(seed):
+    """Active energy == sum over executed intervals of P_active * dur;
+    idle energy >= 0; total >= active."""
+    stt, tables, wl = run(seed=seed)
+    rep = R.metrics(stt, tables)
+    assert rep.active_energy >= 0
+    assert rep.idle_energy >= -1e-6
+    assert rep.total_energy >= rep.active_energy - 1e-6
+    # recompute active energy from the task table
+    status = np.asarray(stt.tasks.status)
+    t0 = np.asarray(stt.tasks.t_start)
+    t1 = np.asarray(stt.tasks.t_end)
+    mach = np.asarray(stt.tasks.machine)
+    mtype = np.asarray(stt.machines.mtype)
+    power = np.asarray(tables.power)
+    ran = (t0 >= 0) & np.isin(status, (S.COMPLETED, S.MISSED_RUNNING))
+    expect = sum(power[mtype[mach[i]], 1] * (t1[i] - t0[i])
+                 for i in np.nonzero(ran)[0])
+    np.testing.assert_allclose(rep.active_energy, expect, rtol=1e-4)
+
+
+def test_machine_utilization_bounded():
+    stt, tables, _ = run()
+    rep = R.metrics(stt, tables)
+    assert (rep.machine_util >= 0).all()
+    assert (rep.machine_util <= 1.0 + 1e-6).all()
+
+
+def test_gantt_renders():
+    stt, tables, _ = run()
+    g = R.ascii_gantt(stt)
+    assert "m00" in g and "|" in g
+
+
+def test_task_table_rows():
+    stt, tables, wl = run()
+    rows = R.task_table(stt)
+    assert len(rows) == wl.n_tasks
+    assert all(r["status"] in R.STATUS_NAMES.values() for r in rows)

@@ -1,0 +1,72 @@
+"""E2C-scheduled serving engine tests (paper's FELARE use-case)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.workload import Workload, poisson_workload
+from repro.models import model as M
+from repro.serving import AppSpec, ServeConfig, ServingEngine
+
+EET = np.array([[0.5, 1.5], [2.0, 0.8]], np.float32)
+POWER = np.array([[50., 200.], [30., 120.]], np.float32)
+
+
+def apps():
+    return [AppSpec("chat", gen_len=8), AppSpec("summarize", gen_len=32)]
+
+
+def test_all_served_under_light_load():
+    eng = ServingEngine(EET, POWER, [0, 1, 1], apps(),
+                        ServeConfig(policy="mct"))
+    wl = poisson_workload(40, rate=1.0, n_task_types=2,
+                          mean_eet=EET.mean(1), slack=6.0, seed=0)
+    rep = eng.run(wl)
+    assert rep.slo_attainment > 0.95
+    assert rep.tokens_generated == sum(
+        apps()[t].gen_len for t in wl.type_id)
+
+
+def test_overload_drops_requests():
+    eng = ServingEngine(EET, POWER, [0], apps(), ServeConfig(policy="fcfs",
+                        cancel_infeasible=False))
+    wl = poisson_workload(60, rate=20.0, n_task_types=2,
+                          mean_eet=EET.mean(1), slack=1.5, seed=1)
+    rep = eng.run(wl)
+    assert rep.missed + rep.cancelled > 0
+    assert rep.completed + rep.missed + rep.cancelled == 60
+
+
+def test_energy_aware_policy_saves_energy():
+    """ee_mct must not use more energy than plain mct on the same trace."""
+    wl = poisson_workload(60, rate=1.5, n_task_types=2,
+                          mean_eet=EET.mean(1), slack=8.0, seed=2)
+    rep_mct = ServingEngine(EET, POWER, [0, 1], apps(),
+                            ServeConfig(policy="mct")).run(wl)
+    rep_ee = ServingEngine(EET, POWER, [0, 1], apps(),
+                           ServeConfig(policy="ee_mct")).run(wl)
+    assert rep_ee.active_energy <= rep_mct.active_energy * 1.05
+
+
+def test_real_mode_generates_tokens():
+    cfg = get_arch("qwen2-1.5b").tiny()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    myapps = [AppSpec("tiny-lm", gen_len=4, arch=cfg, params=params,
+                      prompt_len=8)]
+    eet = np.array([[0.3, 0.6]], np.float32)
+    eng = ServingEngine(eet, POWER, [0, 1], myapps,
+                        ServeConfig(policy="mct", run_mode="real"))
+    wl = poisson_workload(5, rate=1.0, n_task_types=1, slack=10.0, seed=3)
+    rep = eng.run(wl)
+    assert rep.completed == 5
+    assert len(eng.outputs) == 5
+    for toks in eng.outputs.values():
+        assert toks.shape == (4,)
+        assert (toks >= 0).all() and (toks < cfg.vocab_size).all()
+
+
+def test_eet_app_count_mismatch_raises():
+    with pytest.raises(ValueError, match="task types"):
+        ServingEngine(EET, POWER, [0], [AppSpec("only-one")])

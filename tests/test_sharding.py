@@ -1,0 +1,106 @@
+"""Sharding-rule unit tests (pure spec logic; no multi-device needed)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.models import sharding as SH
+
+
+class FakeMesh:
+    """Duck-typed mesh: .axis_names / .shape only (spec logic is pure)."""
+
+    def __init__(self, shape: dict):
+        self._shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_model_dim_sharded_when_divisible():
+    spec = SH.spec_for_param((4096, 8192), ("embed", "mlp"), MESH)
+    assert spec == PS(None, "model")
+
+
+def test_non_divisible_falls_back_replicated():
+    spec = SH.spec_for_param((4096, 1000), ("embed", "mlp"), MESH)
+    assert spec == PS(None, None)
+
+
+def test_only_first_model_axis_used():
+    spec = SH.spec_for_param((64, 64, 128), ("heads", "kv", "mlp"), MESH)
+    assert spec == PS("model", None, None)
+
+
+def test_zero1_extends_first_replicated_dim():
+    spec = SH.zero1_spec(PS(None, "model"), (4096, 8192), MESH)
+    assert spec == PS("data", "model")
+
+
+def test_zero1_multi_axis():
+    spec = SH.zero1_spec(PS(None, "model"), (4096, 8192), MESH3)
+    assert spec == PS(("pod", "data"), "model")
+
+
+def test_zero1_skips_non_divisible():
+    spec = SH.zero1_spec(PS(None, None), (7, 9), MESH)
+    assert spec == PS(None, None)
+
+
+def test_data_axes():
+    assert SH.data_axes(MESH) == ("data",)
+    assert SH.data_axes(MESH3) == ("pod", "data")
+
+
+def test_seq_shard_axes_small_batch_shards_seq():
+    b_ax, s_ax = SH.seq_shard_axes(MESH, batch=1)
+    assert b_ax == ()
+    assert s_ax == ("data", "model")
+
+
+def test_seq_shard_axes_large_batch():
+    b_ax, s_ax = SH.seq_shard_axes(MESH, batch=128)
+    assert b_ax == ("data",)
+    assert s_ax == ("model",)
+
+
+def test_cache_specs_kv_and_stacked():
+    cache = {
+        "cycle": [{"k": np.zeros((4, 8, 64, 2, 16)),
+                   "v": np.zeros((4, 8, 64, 2, 16))}],
+        "prefix": [{"k": np.zeros((8, 64, 2, 16)),
+                    "v": np.zeros((8, 64, 2, 16))}],
+        "pos": np.zeros((8,), np.int32),
+    }
+    mesh = FakeMesh({"data": 4, "model": 2})
+    specs = SH.cache_specs(cache, mesh, batch=8)
+    assert specs["cycle"][0]["k"] == PS(None, "data", "model", None, None)
+    assert specs["prefix"][0]["k"] == PS("data", "model", None, None)
+    assert specs["pos"] == PS("data")
+
+
+def test_cache_specs_recurrent_state_channels_on_model():
+    cache = {"cycle": [{"h": np.zeros((4, 8, 64))}]}
+    mesh = FakeMesh({"data": 4, "model": 2})
+    specs = SH.cache_specs(cache, mesh, batch=8)
+    assert specs["cycle"][0]["h"] == PS(None, "data", "model")
+
+
+def test_param_specs_tree():
+    shapes = {"w": jax.ShapeDtypeStruct((128, 256), np.float32),
+              "b": jax.ShapeDtypeStruct((17,), np.float32)}
+    axes = {"w": ("embed", "mlp"), "b": (None,)}
+    specs = SH.param_specs(shapes, axes, MESH)
+    assert specs["w"] == PS(None, "model")
+    assert specs["b"] == PS(None)
