@@ -20,7 +20,8 @@ from benchmarks.common import md_table, save_result
 from repro.core import engine as E
 from repro.core import ref_engine as RE
 from repro.core import schedulers as P
-from repro.launch.sim import (build_sim_sweep, make_replicas,
+from repro.launch.sim import (build_scenario_sweep, build_sim_sweep,
+                              make_replicas, make_scenario_replicas,
                               run_grouped_sweep)
 
 N_TASKS, N_MACHINES = 128, 16
@@ -38,7 +39,20 @@ def time_sweep(n_replicas: int) -> tuple[float, float]:
     return dt, dt / n_replicas
 
 
-def run(out_dir=None) -> dict:
+def time_scenario_sweep(n_replicas: int) -> tuple[float, float]:
+    """Dynamic-scenario replicas (failure traces + DVFS + preemption)."""
+    inputs = make_scenario_replicas(n_replicas, N_TASKS, N_MACHINES, seed=0)
+    sweep = jax.jit(build_scenario_sweep(N_TASKS, N_MACHINES))
+    out = sweep(*inputs)                       # compile + warm
+    jax.block_until_ready(out["completed"])
+    t0 = time.perf_counter()
+    out = sweep(*inputs)
+    jax.block_until_ready(out["completed"])
+    dt = time.perf_counter() - t0
+    return dt, dt / n_replicas
+
+
+def run(out_dir=None, smoke: bool = False) -> dict:
     # ref engine indexes tuple fields positionally; rebuild host-side
     inputs = make_replicas(2, N_TASKS, N_MACHINES, seed=0)
     t0 = time.perf_counter()
@@ -50,35 +64,51 @@ def run(out_dir=None) -> dict:
                         noise=tb.noise)
     ref_per_replica = (time.perf_counter() - t0) / 2
 
+    sizes = (1, 8, 32) if smoke else (1, 8, 64, 256)
+    big = sizes[-1]
     rows = []
     per_replica_1 = None
-    for n in (1, 8, 64, 256):
+    for n in sizes:
         total, per = time_sweep(n)
         if n == 1:
             per_replica_1 = per
         rows.append({"replicas": n, "total_s": round(total, 4),
                      "per_replica_ms": round(per * 1e3, 3),
                      "replicas_per_s": round(n / total, 1)})
+    per_replica_big = rows[-1]["per_replica_ms"]
 
     # policy-grouped variant: batched lax.switch computes every policy
     # branch per replica; grouping makes the policy a compile-time
     # constant (see launch/sim.run_grouped_sweep)
-    inputs = make_replicas(256, N_TASKS, N_MACHINES, seed=0)
+    inputs = make_replicas(big, N_TASKS, N_MACHINES, seed=0)
     run_grouped_sweep(inputs)                   # compile + warm
     t0 = time.perf_counter()
     run_grouped_sweep(inputs)
-    grouped_per = (time.perf_counter() - t0) / 256
-    rows.append({"replicas": "256 (policy-grouped)",
-                 "total_s": round(grouped_per * 256, 4),
+    grouped_per = (time.perf_counter() - t0) / big
+    rows.append({"replicas": f"{big} (policy-grouped)",
+                 "total_s": round(grouped_per * big, 4),
                  "per_replica_ms": round(grouped_per * 1e3, 3),
                  "replicas_per_s": round(1 / grouped_per, 1)})
 
+    # dynamic-scenario variant: availability traces + DVFS + preemption
+    # add an event phase and masks; T4 bounds their overhead
+    scen_n = 8 if smoke else 64
+    scen_total, scen_per = time_scenario_sweep(scen_n)
+    rows.append({"replicas": f"{scen_n} (scenario)",
+                 "total_s": round(scen_total, 4),
+                 "per_replica_ms": round(scen_per * 1e3, 3),
+                 "replicas_per_s": round(scen_n / scen_total, 1)})
+    static_same_n = next(r for r in rows
+                         if r["replicas"] == scen_n)["per_replica_ms"]
+
     checks = {
         "T1_jit_beats_python_ref": bool(per_replica_1 < ref_per_replica),
-        "T2_vmap_amortizes": bool(rows[3]["per_replica_ms"]
+        "T2_vmap_amortizes": bool(per_replica_big
                                   < 2 * rows[0]["per_replica_ms"]),
         "T3_grouping_beats_batched_switch": bool(
-            grouped_per * 1e3 < rows[3]["per_replica_ms"]),
+            grouped_per * 1e3 < per_replica_big),
+        "T4_scenario_overhead_bounded": bool(
+            scen_per * 1e3 < 4 * static_same_n),
     }
     payload = {"rows": rows,
                "ref_per_replica_ms": round(ref_per_replica * 1e3, 2),

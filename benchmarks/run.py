@@ -3,15 +3,24 @@
 Runs one harness per paper table/claim (see DESIGN.md §9) plus the
 roofline readers over whatever dry-run records exist, and writes JSON
 artifacts to results/bench/.
+
+``--smoke`` runs a CI-sized subset (small replica counts, quick modules
+only) so the whole aggregate finishes in a couple of minutes on a CPU
+runner.  Results are recorded in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
 
 def main(argv=None):
     t0 = time.perf_counter()
+    argv = list(argv or [])
+    smoke = "--smoke" in argv
+    if smoke:
+        argv.remove("--smoke")
     from benchmarks import (bench_energy, bench_engine, bench_kernels,
                             bench_policies, eet_from_roofline, roofline)
     mods = [("bench_policies", bench_policies),
@@ -20,6 +29,11 @@ def main(argv=None):
             ("bench_kernels", bench_kernels),
             ("roofline", roofline),
             ("eet_from_roofline", eet_from_roofline)]
+    if smoke:
+        # CI subset: the engine claims + the cheap readers
+        smoke_set = {"bench_engine", "bench_energy", "roofline",
+                     "eet_from_roofline"}
+        mods = [(n, m) for n, m in mods if n in smoke_set]
     if argv:
         mods = [(n, m) for n, m in mods if n in argv]
     failures = []
@@ -27,7 +41,10 @@ def main(argv=None):
     for name, mod in mods:
         print(f"\n{'='*70}\n# {name}\n{'='*70}")
         try:
-            payload = mod.run()
+            kwargs = {}
+            if smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            payload = mod.run(**kwargs)
             for k, v in (payload.get("checks") or {}).items():
                 all_checks[f"{name}.{k}"] = v
         except Exception as e:  # noqa: BLE001

@@ -16,7 +16,11 @@ from repro.core.engine import (SimParams, make_tables, run_sim, run_sweep,
 from repro.core.report import SimReport, ascii_gantt, format_report, metrics
 from repro.core.schedulers import (BATCH_POLICIES, POLICY_IDS, POLICY_NAMES,
                                    SCHEDULERS, register_policy)
-from repro.core.workload import (Workload, bursty_workload, load_workload_csv,
+from repro.core.state import MachineDynamics, machine_up, static_dynamics
+from repro.core.workload import (DVFS_STATES, Scenario, Workload,
+                                 bursty_workload, diurnal_workload,
+                                 failure_trace, load_workload_csv,
+                                 make_scenario, onoff_workload,
                                  poisson_workload, save_workload_csv,
                                  uniform_workload)
 
@@ -28,4 +32,8 @@ __all__ = [
     "POLICY_NAMES", "SCHEDULERS", "register_policy", "Workload",
     "bursty_workload", "load_workload_csv", "poisson_workload",
     "save_workload_csv", "uniform_workload",
+    # dynamic scenarios
+    "MachineDynamics", "machine_up", "static_dynamics", "DVFS_STATES",
+    "Scenario", "diurnal_workload", "failure_trace", "make_scenario",
+    "onoff_workload",
 ]

@@ -1,10 +1,13 @@
 """Energy accounting (paper feature (iii)).
 
-The engine accrues *active* energy on each completion / drop
-(``P_active[mtype] * execution_seconds``).  Idle energy is integrated at
-report time: every machine draws ``P_idle[mtype]`` whenever it is not
-executing, from t=0 until the simulation makespan.  Total system energy is
-therefore exact for the piecewise-constant power model E2C uses.
+The engine accrues *active* energy on each completion / drop / preemption
+(``P_active[mtype] * power_scale * execution_seconds``).  Idle energy is
+integrated at report time: every machine draws ``P_idle[mtype] *
+power_scale`` whenever it is not executing, from t=0 until the simulation
+makespan.  In dynamic scenarios a machine that is down draws nothing, so
+its downtime (clipped to the makespan) is subtracted from the idle
+integral.  Total system energy is therefore exact for the
+piecewise-constant power model E2C uses.
 """
 from __future__ import annotations
 
@@ -18,11 +21,30 @@ def makespan(st: S.SimState) -> jnp.ndarray:
     return jnp.maximum(jnp.max(st.tasks.t_end), 0.0)
 
 
-def idle_energy(st: S.SimState, tables: S.StaticTables) -> jnp.ndarray:
-    """(M,) idle-power energy per machine up to the makespan."""
+def downtime(dynamics: S.MachineDynamics, span: jnp.ndarray) -> jnp.ndarray:
+    """(M,) seconds each machine spent down within [0, span]."""
+    s = jnp.clip(dynamics.down_start, 0.0, span)
+    e = jnp.clip(dynamics.down_end, 0.0, span)
+    return jnp.sum(jnp.maximum(e - s, 0.0), axis=-1)
+
+
+def availability(dynamics: S.MachineDynamics,
+                 span: jnp.ndarray) -> jnp.ndarray:
+    """(M,) fraction of [0, span] each machine was available."""
+    span = jnp.maximum(span, 1e-9)
+    return 1.0 - downtime(dynamics, span) / span
+
+
+def idle_energy(st: S.SimState, tables: S.StaticTables,
+                dynamics: S.MachineDynamics | None = None) -> jnp.ndarray:
+    """(M,) idle-power energy per machine up to the makespan (down
+    machines are powered off and draw nothing)."""
     span = makespan(st)
     idle_t = jnp.maximum(span - st.machines.active_time, 0.0)
-    return tables.power[st.machines.mtype, 0] * idle_t
+    if dynamics is not None:
+        idle_t = jnp.maximum(idle_t - downtime(dynamics, span), 0.0)
+    return tables.power[st.machines.mtype, 0] * st.machines.power_scale \
+        * idle_t
 
 
 def active_energy(st: S.SimState) -> jnp.ndarray:
@@ -30,12 +52,14 @@ def active_energy(st: S.SimState) -> jnp.ndarray:
     return st.machines.energy
 
 
-def total_energy(st: S.SimState, tables: S.StaticTables) -> jnp.ndarray:
+def total_energy(st: S.SimState, tables: S.StaticTables,
+                 dynamics: S.MachineDynamics | None = None) -> jnp.ndarray:
     """Scalar: total system energy in Joules."""
-    return jnp.sum(active_energy(st) + idle_energy(st, tables))
+    return jnp.sum(active_energy(st) + idle_energy(st, tables, dynamics))
 
 
-def energy_per_completed_task(st: S.SimState,
-                              tables: S.StaticTables) -> jnp.ndarray:
+def energy_per_completed_task(st: S.SimState, tables: S.StaticTables,
+                              dynamics: S.MachineDynamics | None = None
+                              ) -> jnp.ndarray:
     n_done = jnp.sum(st.tasks.status == S.COMPLETED)
-    return total_energy(st, tables) / jnp.maximum(n_done, 1)
+    return total_energy(st, tables, dynamics) / jnp.maximum(n_done, 1)

@@ -11,13 +11,22 @@ All queue mutations are masked vector updates over the fixed-shape state in
 Event ordering within a timestamp `t` (matches the E2C loop):
   1. completions  (``busy_until <= t``; finishing exactly at the deadline
      counts as completed),
-  2. arrivals     (``arrival <= t`` -> batch queue, overflow -> cancelled),
-  3. deadline drops (queued -> MISSED_QUEUE, running -> MISSED_RUNNING and
+  2. availability (dynamic scenarios only: machines inside a down interval
+     preempt their running task and flush their queue — kill to the
+     PREEMPTED pool or requeue to the batch queue; partial energy is
+     charged either way),
+  3. arrivals     (``arrival <= t`` -> batch queue, overflow -> cancelled),
+  4. deadline drops (queued -> MISSED_QUEUE, running -> MISSED_RUNNING and
      the machine is freed; partial energy is charged),
-  4. scheduler drain (policy picks (task, machine) pairs until no room / no
-     tasks; cancellation wrapper may send tasks to the cancelled pool),
-  5. start tasks on idle machines (lowest mapping-sequence first — FIFO
-     within a machine queue, E2C's sequential execution).
+  5. scheduler drain (policy picks (task, machine) pairs until no room / no
+     tasks; down machines are masked out of ``SchedView.room``;
+     cancellation wrapper may send tasks to the cancelled pool),
+  6. start tasks on idle *available* machines (lowest mapping-sequence
+     first — FIFO within a machine queue, E2C's sequential execution).
+
+DVFS: each machine's ``speed`` divides its EET row (both the scheduler's
+expectations and actual runtimes) and ``power_scale`` multiplies its
+idle/active power — see ``state.MachineDynamics``.
 """
 from __future__ import annotations
 
@@ -56,7 +65,7 @@ def _completions(st: S.SimState, tb: S.StaticTables) -> S.SimState:
     tid = jnp.where(done_m, mach.running, n)          # n = dropped by scatter
     dur = mach.busy_until - tasks.t_start[jnp.clip(mach.running, 0, n - 1)]
     dur = jnp.where(done_m, dur, 0.0)
-    p_active = tb.power[mach.mtype, 1]
+    p_active = tb.power[mach.mtype, 1] * mach.power_scale
 
     tasks = replace(
         tasks,
@@ -71,6 +80,65 @@ def _completions(st: S.SimState, tb: S.StaticTables) -> S.SimState:
         running=jnp.where(done_m, -1, mach.running),
     )
     return replace(st, tasks=tasks, machines=mach)
+
+
+def _availability(st: S.SimState, tb: S.StaticTables,
+                  dyn: S.MachineDynamics) -> S.SimState:
+    """Dynamic-scenario phase: evict work from machines that are down.
+
+    Runs between completions and arrivals.  A machine inside a down
+    interval at the current event time preempts its running task (partial
+    energy charged for the slice already executed) and flushes its local
+    queue.  ``dyn.kill[m]`` selects spot-reclaim semantics (evictions are
+    terminal ``PREEMPTED``) vs fail/repair semantics (evictions rejoin the
+    batch queue and restart from scratch).  Because the scheduler masks
+    down machines out of ``room`` and ``_start_tasks`` skips them, work
+    only ever needs evicting at the down transition itself.
+    """
+    tasks, mach = st.tasks, st.machines
+    n = tasks.arrival.shape[0]
+    n_m = mach.mtype.shape[0]
+    down = ~S.machine_up(dyn, st.time)                     # (M,)
+
+    # -- running tasks on down machines: charge the partial slice ---------
+    running0 = mach.running
+    hit = down & (running0 >= 0)
+    rid = jnp.clip(running0, 0, n - 1)
+    dur = jnp.where(hit, st.time - tasks.t_start[rid], 0.0)
+    p_active = tb.power[mach.mtype, 1] * mach.power_scale
+    mach = replace(
+        mach,
+        energy=mach.energy + p_active * dur,
+        active_time=mach.active_time + dur,
+        running=jnp.where(hit, -1, running0),
+    )
+    tid_kill = jnp.where(hit & dyn.kill, running0, n)
+    tid_req = jnp.where(hit & ~dyn.kill, running0, n)
+    status = tasks.status.at[tid_kill].set(S.PREEMPTED, mode="drop") \
+                         .at[tid_req].set(S.IN_BATCH, mode="drop")
+    t_end = tasks.t_end.at[tid_kill].set(st.time, mode="drop")
+    t_start = tasks.t_start.at[tid_req].set(-1.0, mode="drop")
+    machine = tasks.machine.at[tid_req].set(-1, mode="drop")
+    seq = tasks.seq.at[tid_req].set(INT_MAX, mode="drop")
+    n_pre = st.n_preempts.at[jnp.where(hit, running0, n)].add(1, mode="drop")
+
+    # -- queued tasks on down machines: flush the machine queue -----------
+    m_of = jnp.clip(machine, 0, n_m - 1)
+    in_down_q = (status == S.IN_MQ) & (machine >= 0) & down[m_of]
+    kq = in_down_q & dyn.kill[m_of]
+    rq = in_down_q & ~dyn.kill[m_of]
+    status = jnp.where(kq, S.PREEMPTED, status)
+    t_end = jnp.where(kq, st.time, t_end)
+    status = jnp.where(rq, S.IN_BATCH, status)
+    machine = jnp.where(rq, -1, machine)
+    seq = jnp.where(rq, INT_MAX, seq)
+    n_pre = n_pre + in_down_q.astype(jnp.int32)
+    mq_count = jnp.where(down, 0, st.mq_count)
+
+    tasks = replace(tasks, status=status, t_end=t_end, t_start=t_start,
+                    machine=machine, seq=seq)
+    return replace(st, tasks=tasks, machines=mach, n_preempts=n_pre,
+                   mq_count=mq_count)
 
 
 def _arrivals(st: S.SimState, qcap: int) -> S.SimState:
@@ -109,7 +177,7 @@ def _deadline_drops(st: S.SimState, tb: S.StaticTables) -> S.SimState:
     dur = jnp.where(miss_r, run_dl - tasks.t_start[run_id], 0.0)
     status = status.at[tid].set(S.MISSED_RUNNING, mode="drop")
     t_end = t_end.at[tid].set(jnp.where(miss_r, run_dl, 0.0), mode="drop")
-    p_active = tb.power[mach.mtype, 1]
+    p_active = tb.power[mach.mtype, 1] * mach.power_scale
     mach = replace(
         mach,
         energy=mach.energy + p_active * dur,
@@ -145,7 +213,8 @@ def _apply_decision(st: S.SimState, dec: P.Decision) -> S.SimState:
 
 
 def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
-           params: SimParams, const: tuple | None = None) -> S.SimState:
+           params: SimParams, const: tuple | None = None,
+           up: jnp.ndarray | None = None) -> S.SimState:
     """Invoke the scheduler until it returns a no-op.
 
     Each iteration maps or cancels exactly one batch-queue task, so the
@@ -161,7 +230,7 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
     def body(c):
         s, _, iters = c
         dec = P.dispatch(policy_id, s, tb, params.lcap,
-                         params.cancel_infeasible, const)
+                         params.cancel_infeasible, const, up)
         s = _apply_decision(s, dec)
         return s, dec.task >= 0, iters + 1
 
@@ -170,11 +239,14 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
     return st
 
 
-def _start_tasks(st: S.SimState, tb: S.StaticTables) -> S.SimState:
+def _start_tasks(st: S.SimState, tb: S.StaticTables,
+                 up: jnp.ndarray | None = None) -> S.SimState:
     tasks, mach = st.tasks, st.machines
     n = tasks.arrival.shape[0]
     n_m = mach.mtype.shape[0]
     idle = mach.running < 0
+    if up is not None:
+        idle = idle & up
     # (N, M) queued mask; pick the lowest mapping-seq task per idle machine
     queued = (tasks.status == S.IN_MQ)[:, None] & (
         tasks.machine[:, None] == jnp.arange(n_m)[None, :])
@@ -183,7 +255,8 @@ def _start_tasks(st: S.SimState, tb: S.StaticTables) -> S.SimState:
     has = queued.any(axis=0)
     start = idle & has
     tid = jnp.where(start, pick, n)
-    dur = S.exec_time(tb, tasks, jnp.clip(pick, 0, n - 1), mach.mtype)
+    dur = S.exec_time(tb, tasks, jnp.clip(pick, 0, n - 1), mach.mtype,
+                      mach.speed)
     tasks = replace(
         tasks,
         status=tasks.status.at[tid].set(S.RUNNING, mode="drop"),
@@ -198,7 +271,8 @@ def _start_tasks(st: S.SimState, tb: S.StaticTables) -> S.SimState:
     return replace(st, tasks=tasks, machines=mach, mq_count=mq_count)
 
 
-def _next_event_time(st: S.SimState) -> jnp.ndarray:
+def _next_event_time(st: S.SimState,
+                     dyn: S.MachineDynamics | None = None) -> jnp.ndarray:
     tasks, mach = st.tasks, st.machines
     t_arr = jnp.min(jnp.where(tasks.status == S.NOT_ARRIVED,
                               tasks.arrival, S.INF))
@@ -206,7 +280,15 @@ def _next_event_time(st: S.SimState) -> jnp.ndarray:
     live = (tasks.status == S.IN_BATCH) | (tasks.status == S.IN_MQ) | (
         tasks.status == S.RUNNING)
     t_dl = jnp.min(jnp.where(live, tasks.deadline, S.INF))
-    return jnp.minimum(jnp.minimum(t_arr, t_cmp), t_dl)
+    t = jnp.minimum(jnp.minimum(t_arr, t_cmp), t_dl)
+    if dyn is not None:
+        # availability transitions are events too; strictly future ones
+        # only (a transition at the current time was already processed)
+        trans = jnp.concatenate([dyn.down_start.ravel(),
+                                 dyn.down_end.ravel()])
+        t_tr = jnp.min(jnp.where(trans > st.time, trans, S.INF))
+        t = jnp.minimum(t, t_tr)
+    return t
 
 
 # --------------------------------------------------------------------------
@@ -214,22 +296,30 @@ def _next_event_time(st: S.SimState) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("params",))
 def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
-            policy_id: jnp.ndarray, params: SimParams = SimParams()
-            ) -> S.SimState:
+            policy_id: jnp.ndarray, params: SimParams = SimParams(),
+            dynamics: S.MachineDynamics | None = None) -> S.SimState:
     """Run one simulation replica to completion; returns the final state.
 
     All array arguments may carry leading batch dims via ``vmap`` (see
-    ``run_sweep``).  ``params`` is static.
+    ``run_sweep``).  ``params`` is static.  ``dynamics`` (optional) adds
+    machine availability traces + DVFS states; omitting it compiles the
+    static-fleet engine with zero scenario overhead.
     """
-    st = S.init_state(tasks, mtype)
+    st = S.init_state(tasks, mtype, dynamics)
     n = tasks.arrival.shape[0]
     max_events = params.max_events or (4 * n + 16)
+    if dynamics is not None and params.max_events is None:
+        # every down interval contributes at most 2 extra events
+        max_events += 2 * dynamics.down_start.shape[-1] * mtype.shape[-1]
     policy_id = jnp.asarray(policy_id, jnp.int32)
 
     # simulation invariants hoisted out of the event/drain loops: the
     # (N, M) expected-time and energy matrices never change mid-run
-    eet_nm = tables.eet[tasks.type_id[:, None], mtype[None, :]]
-    energy_nm = eet_nm * tables.power[mtype, 1][None, :]
+    # (DVFS operating points are fixed per run, so they fold in here)
+    eet_nm = tables.eet[tasks.type_id[:, None], mtype[None, :]] \
+        / st.machines.speed[None, :]
+    energy_nm = eet_nm * (tables.power[mtype, 1]
+                          * st.machines.power_scale)[None, :]
     const = (eet_nm, energy_nm)
 
     def cond(st):
@@ -237,13 +327,17 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
         return ~done & (st.n_events < max_events)
 
     def body(st):
-        t = _next_event_time(st)
+        t = _next_event_time(st, dynamics)
         st = replace(st, time=t)
         st = _completions(st, tables)
+        up = None
+        if dynamics is not None:
+            st = _availability(st, tables, dynamics)
+            up = S.machine_up(dynamics, st.time)
         st = _arrivals(st, params.qcap)
         st = _deadline_drops(st, tables)
-        st = _drain(st, tables, policy_id, params, const)
-        st = _start_tasks(st, tables)
+        st = _drain(st, tables, policy_id, params, const, up)
+        st = _start_tasks(st, tables, up)
         return replace(st, n_events=st.n_events + 1)
 
     return jax.lax.while_loop(cond, body, st)
@@ -264,25 +358,40 @@ def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
              machine_types: np.ndarray | list[int], policy: str = "mct",
              *, lcap: int = 4, qcap: int | None = None,
              cancel_infeasible: bool = True,
-             noise: np.ndarray | None = None) -> S.SimState:
-    """Host-friendly wrapper: one replica, named policy."""
+             noise: np.ndarray | None = None,
+             dynamics: S.MachineDynamics | None = None) -> S.SimState:
+    """Host-friendly wrapper: one replica, named policy.
+
+    ``dynamics`` makes the fleet dynamic (failures / spot preemption /
+    DVFS) — build one with ``workload.Scenario.dynamics()`` or
+    ``state.static_dynamics``.
+    """
     params = SimParams(lcap=lcap, qcap=qcap or (1 << 30),
                        cancel_infeasible=cancel_infeasible)
     tables = make_tables(eet, power, workload.n_tasks, noise=noise)
     mtype = jnp.asarray(np.asarray(machine_types, np.int32))
     return run_sim(workload.to_task_table(), mtype, tables,
-                   P.POLICY_IDS[policy], params)
+                   P.POLICY_IDS[policy], params, dynamics)
 
 
 def run_sweep(tasks: S.TaskTable, mtype: jnp.ndarray,
               tables: S.StaticTables, policy_ids: jnp.ndarray,
-              params: SimParams = SimParams()) -> S.SimState:
+              params: SimParams = SimParams(),
+              dynamics: S.MachineDynamics | None = None) -> S.SimState:
     """vmap over leading replica axes of any/all array arguments.
 
     Arguments that should be shared across replicas must be broadcast by the
     caller (see ``launch/sim.py`` which also shards the replica axis over the
-    ("pod", "data") mesh axes for pod-scale Monte-Carlo).
+    ("pod", "data") mesh axes for pod-scale Monte-Carlo).  ``dynamics``,
+    when given, carries a leading replica axis like everything else — a
+    Monte-Carlo grid over failure rates / DVFS states is just another
+    stacked input.
     """
-    def one(tasks, mtype, tables, pid):
-        return run_sim(tasks, mtype, tables, pid, params)
-    return jax.vmap(one)(tasks, mtype, tables, policy_ids)
+    if dynamics is None:
+        def one(tasks, mtype, tables, pid):
+            return run_sim(tasks, mtype, tables, pid, params)
+        return jax.vmap(one)(tasks, mtype, tables, policy_ids)
+
+    def one_dyn(tasks, mtype, tables, pid, dyn):
+        return run_sim(tasks, mtype, tables, pid, params, dyn)
+    return jax.vmap(one_dyn)(tasks, mtype, tables, policy_ids, dynamics)

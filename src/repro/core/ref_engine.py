@@ -29,6 +29,7 @@ class RefResult:
     active_energy: np.ndarray     # (M,)
     active_time: np.ndarray       # (M,)
     makespan: float
+    n_preempts: np.ndarray | None = None    # (N,) forced evictions
 
 
 @dataclass
@@ -44,6 +45,12 @@ class _Sim:
     lcap: int
     qcap: int
     cancel_infeasible: bool
+    # dynamic scenario (see state.MachineDynamics); defaults = static fleet
+    speed: np.ndarray | None = None          # (M,) DVFS speed multiplier
+    power_scale: np.ndarray | None = None    # (M,) DVFS power multiplier
+    down_start: np.ndarray | None = None     # (M, K) inf-padded
+    down_end: np.ndarray | None = None       # (M, K)
+    kill: np.ndarray | None = None           # (M,) bool
 
     status: np.ndarray = field(init=False)
     machine: np.ndarray = field(init=False)
@@ -60,6 +67,17 @@ class _Sim:
 
     def __post_init__(self):
         n, m = len(self.arrival), len(self.mtype)
+        if self.speed is None:
+            self.speed = np.ones(m)
+        if self.power_scale is None:
+            self.power_scale = np.ones(m)
+        if self.down_start is None:
+            self.down_start = np.full((m, 1), np.inf)
+        if self.down_end is None:
+            self.down_end = np.full((m, 1), np.inf)
+        if self.kill is None:
+            self.kill = np.zeros(m, bool)
+        self.n_preempts = np.zeros(n, np.int32)
         self.status = np.full(n, S.NOT_ARRIVED, np.int32)
         self.machine = np.full(n, -1, np.int32)
         self.seq = np.full(n, np.iinfo(np.int32).max, np.int64)
@@ -73,10 +91,18 @@ class _Sim:
     # ---- helpers ---------------------------------------------------------
     def exec_time(self, t: int, m: int) -> float:
         return float(self.eet[self.type_id[t], self.mtype[m]]
-                     * self.noise[t])
+                     * self.noise[t] / self.speed[m])
 
     def expected(self, t: int, m: int) -> float:
-        return float(self.eet[self.type_id[t], self.mtype[m]])
+        return float(self.eet[self.type_id[t], self.mtype[m]]
+                     / self.speed[m])
+
+    def p_active(self, m: int) -> float:
+        return float(self.power[self.mtype[m], 1] * self.power_scale[m])
+
+    def up(self, m: int) -> bool:
+        return not np.any((self.down_start[m] <= self.time)
+                          & (self.time < self.down_end[m]))
 
     def queue_of(self, m: int) -> list[int]:
         ids = np.nonzero((self.status == S.IN_MQ) & (self.machine == m))[0]
@@ -102,9 +128,39 @@ class _Sim:
                 dur = self.busy_until[m] - self.t_start[t]
                 self.status[t] = S.COMPLETED
                 self.t_end[t] = self.busy_until[m]
-                self.energy[m] += self.power[self.mtype[m], 1] * dur
+                self.energy[m] += self.p_active(m) * dur
                 self.active_time[m] += dur
                 self.running[m] = -1
+
+    def availability(self):
+        """Machines inside a down interval evict running + queued work."""
+        for m in range(len(self.mtype)):
+            if self.up(m):
+                continue
+            t = self.running[m]
+            if t >= 0:
+                dur = self.time - self.t_start[t]
+                self.energy[m] += self.p_active(m) * dur
+                self.active_time[m] += dur
+                self.running[m] = -1
+                self.n_preempts[t] += 1
+                if self.kill[m]:
+                    self.status[t] = S.PREEMPTED
+                    self.t_end[t] = self.time
+                else:
+                    self.status[t] = S.IN_BATCH
+                    self.machine[t] = -1
+                    self.seq[t] = np.iinfo(np.int32).max
+                    self.t_start[t] = -1.0
+            for t in self.queue_of(m):
+                self.n_preempts[t] += 1
+                if self.kill[m]:
+                    self.status[t] = S.PREEMPTED
+                    self.t_end[t] = self.time
+                else:
+                    self.status[t] = S.IN_BATCH
+                    self.machine[t] = -1
+                    self.seq[t] = np.iinfo(np.int32).max
 
     def arrivals(self):
         new = np.nonzero((self.status == S.NOT_ARRIVED)
@@ -129,7 +185,7 @@ class _Sim:
                 dur = self.deadline[t] - self.t_start[t]
                 self.status[t] = S.MISSED_RUNNING
                 self.t_end[t] = self.deadline[t]
-                self.energy[m] += self.power[self.mtype[m], 1] * dur
+                self.energy[m] += self.p_active(m) * dur
                 self.active_time[m] += dur
                 self.running[m] = -1
 
@@ -137,7 +193,8 @@ class _Sim:
     def decide(self):
         """Returns (task, machine) or None; mirrors schedulers.py exactly."""
         q = self.batch_queue()
-        rooms = [m for m in range(len(self.mtype)) if self.room(m)]
+        rooms = [m for m in range(len(self.mtype))
+                 if self.room(m) and self.up(m)]
         if not q or not rooms:
             return None
         head = q[0]
@@ -160,7 +217,7 @@ class _Sim:
             return head, m
         if self.policy == "ee_met":
             m = min(rooms, key=lambda m: (
-                self.expected(head, m) * self.power[self.mtype[m], 1], m))
+                self.expected(head, m) * self.p_active(m), m))
             return head, m
         if self.policy == "ee_mct":
             feas = [m for m in rooms
@@ -168,7 +225,7 @@ class _Sim:
                     <= self.deadline[head]]
             if feas:
                 m = min(feas, key=lambda m: (
-                    self.expected(head, m) * self.power[self.mtype[m], 1], m))
+                    self.expected(head, m) * self.p_active(m), m))
             else:
                 m = min(rooms, key=lambda m: (
                     avail[m] + self.expected(head, m), m))
@@ -197,7 +254,8 @@ class _Sim:
             if dec is None:
                 return
             t, m = dec
-            rooms = [mm for mm in range(len(self.mtype)) if self.room(mm)]
+            rooms = [mm for mm in range(len(self.mtype))
+                     if self.room(mm) and self.up(mm)]
             best = min(self.avail(mm) + self.expected(t, mm) for mm in rooms)
             if self.cancel_infeasible and best > self.deadline[t]:
                 self.status[t] = S.CANCELLED
@@ -211,7 +269,7 @@ class _Sim:
 
     def start_tasks(self):
         for m in range(len(self.mtype)):
-            if self.running[m] < 0:
+            if self.running[m] < 0 and self.up(m):
                 queue = self.queue_of(m)
                 if queue:
                     t = queue[0]
@@ -233,17 +291,25 @@ class _Sim:
         dl = self.deadline[live]
         if dl.size:
             cands.append(dl.min())
+        trans = np.concatenate([self.down_start.ravel(),
+                                self.down_end.ravel()])
+        trans = trans[(trans > self.time) & np.isfinite(trans)]
+        if trans.size:
+            cands.append(trans.min())
         return min(cands) if cands else np.inf
 
     def run(self, max_events: int | None = None) -> RefResult:
         n = len(self.arrival)
-        budget = max_events or (4 * n + 16)
+        budget = max_events or (4 * n + 16
+                                + 2 * self.down_start.shape[-1]
+                                * len(self.mtype))
         while not np.all(self.status >= S.COMPLETED) and budget > 0:
             t = self.next_event()
             if not np.isfinite(t):
                 break
             self.time = t
             self.completions()
+            self.availability()
             self.arrivals()
             self.deadline_drops()
             self.drain()
@@ -252,19 +318,30 @@ class _Sim:
         return RefResult(self.status.copy(), self.machine.copy(),
                          self.t_start.copy(), self.t_end.copy(),
                          self.energy.copy(), self.active_time.copy(),
-                         float(max(self.t_end.max(), 0.0)))
+                         float(max(self.t_end.max(), 0.0)),
+                         self.n_preempts.copy())
 
 
 def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                  policy="mct", lcap=4, qcap=1 << 30,
                  cancel_infeasible=True, noise=None,
+                 speed=None, power_scale=None, down_start=None,
+                 down_end=None, kill=None,
                  max_events=None) -> RefResult:
+    """Oracle run.  The ``speed``/``power_scale``/``down_*``/``kill``
+    kwargs mirror ``state.MachineDynamics`` (all default to the static
+    fleet)."""
     arrival = np.asarray(arrival, np.float64)
     if noise is None:
         noise = np.ones(len(arrival))
+    def _f64(x):
+        return None if x is None else np.asarray(x, np.float64)
     sim = _Sim(arrival, np.asarray(type_id, np.int64),
                np.asarray(deadline, np.float64),
                np.asarray(eet, np.float64), np.asarray(power, np.float64),
                np.asarray(mtype, np.int64), np.asarray(noise, np.float64),
-               policy, lcap, qcap, cancel_infeasible)
+               policy, lcap, qcap, cancel_infeasible,
+               speed=_f64(speed), power_scale=_f64(power_scale),
+               down_start=_f64(down_start), down_end=_f64(down_end),
+               kill=None if kill is None else np.asarray(kill, bool))
     return sim.run(max_events)

@@ -21,6 +21,7 @@ STATUS_NAMES = {
     S.CANCELLED: "cancelled",
     S.MISSED_QUEUE: "missed_queue",
     S.MISSED_RUNNING: "missed_running",
+    S.PREEMPTED: "preempted",
 }
 
 
@@ -40,6 +41,10 @@ class SimReport:
     throughput: float          # completed / makespan
     energy_per_task: float
     machine_util: np.ndarray   # (M,) active_time / makespan
+    # dynamic-scenario columns (trivial for a static fleet)
+    preempted: int = 0         # tasks killed by failures / spot reclaims
+    requeues: int = 0          # total forced evictions that were requeued
+    availability: float = 1.0  # mean fraction of up time across machines
 
     @property
     def completion_rate(self) -> float:
@@ -57,7 +62,9 @@ class SimReport:
         return {
             "completed": self.completed, "cancelled": self.cancelled,
             "missed": self.missed_queue + self.missed_running,
+            "preempted": self.preempted,
             "completion_rate": round(self.completion_rate, 4),
+            "availability": round(self.availability, 4),
             "makespan": round(self.makespan, 4),
             "energy_J": round(self.total_energy, 2),
             "energy_per_task_J": round(self.energy_per_task, 3),
@@ -66,9 +73,12 @@ class SimReport:
         }
 
 
-def metrics(st: S.SimState, tables: S.StaticTables) -> SimReport:
+def metrics(st: S.SimState, tables: S.StaticTables,
+            dynamics: S.MachineDynamics | None = None) -> SimReport:
     """Host-side report from a final SimState (also works on vmapped states
-    via ``jax.tree_util.tree_map(lambda x: x[i], st)``)."""
+    via ``jax.tree_util.tree_map(lambda x: x[i], st)``).  Pass the
+    scenario ``dynamics`` to get availability % and downtime-corrected
+    idle energy."""
     status = np.asarray(st.tasks.status)
     t_end = np.asarray(st.tasks.t_end)
     t_start = np.asarray(st.tasks.t_start)
@@ -78,15 +88,21 @@ def metrics(st: S.SimState, tables: S.StaticTables) -> SimReport:
     started = t_start >= 0
     span = float(E.makespan(st))
     active = float(jnp.sum(E.active_energy(st)))
-    idle = float(jnp.sum(E.idle_energy(st, tables)))
+    idle = float(jnp.sum(E.idle_energy(st, tables, dynamics)))
     n_done = int(completed.sum())
     util = np.asarray(st.machines.active_time) / max(span, 1e-9)
+    avail = 1.0 if dynamics is None else float(
+        jnp.mean(E.availability(dynamics, E.makespan(st))))
     return SimReport(
         n_tasks=n,
         completed=n_done,
         cancelled=int((status == S.CANCELLED).sum()),
         missed_queue=int((status == S.MISSED_QUEUE).sum()),
         missed_running=int((status == S.MISSED_RUNNING).sum()),
+        preempted=int((status == S.PREEMPTED).sum()),
+        requeues=int(np.asarray(st.n_preempts).sum())
+        - int((status == S.PREEMPTED).sum()),
+        availability=avail,
         makespan=span,
         total_energy=active + idle,
         active_energy=active,

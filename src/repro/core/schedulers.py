@@ -49,9 +49,13 @@ class SchedView(NamedTuple):
     batch policies need it (``completion_full``); immediate policies use
     one O(M) row (``completion_row``), which cuts the per-drain-step
     work for the common case (EXPERIMENTS.md §Perf sim-cell iteration).
+
+    ``room`` already folds in the machine-availability mask of dynamic
+    scenarios (down machines never have room), so policies that respect
+    ``room`` — all of them — are automatically failure-aware.
     """
     in_batch: jnp.ndarray    # bool (N,)
-    room: jnp.ndarray        # bool (M,)  machine queue has space
+    room: jnp.ndarray        # bool (M,)  machine queue has space AND is up
     avail: jnp.ndarray       # f32 (M,)   earliest start time for new work
     eet_nm: jnp.ndarray      # f32 (N, M) expected exec time of task n on m
     energy_nm: jnp.ndarray   # f32 (N, M) eet * active power
@@ -70,20 +74,27 @@ BIG = jnp.float32(1e30)
 
 
 def build_view(state: S.SimState, tables: S.StaticTables,
-               lcap: int, const: tuple | None = None) -> SchedView:
+               lcap: int, const: tuple | None = None,
+               up: jnp.ndarray | None = None) -> SchedView:
     """``const``: optional precomputed (eet_nm, energy_nm) — both are
-    simulation invariants; the engine hoists them out of the drain loop
-    (EXPERIMENTS.md §Perf, sim-cell iteration)."""
+    simulation invariants (DVFS multipliers folded in); the engine hoists
+    them out of the drain loop (EXPERIMENTS.md §Perf, sim-cell iteration).
+    ``up``: optional (M,) availability mask from the scenario dynamics —
+    down machines are removed from ``room``."""
     tasks, mach = state.tasks, state.machines
     n = tasks.arrival.shape[0]
     in_batch = tasks.status == S.IN_BATCH
     # incremental integer queue counts maintained by the engine (exact)
     qc = state.mq_count
     room = qc < lcap
+    if up is not None:
+        room = room & up
     avail = S.machine_available(state, tables)
     if const is None:
-        eet_nm = tables.eet[tasks.type_id[:, None], mach.mtype[None, :]]
-        energy_nm = eet_nm * tables.power[mach.mtype, 1][None, :]
+        eet_nm = tables.eet[tasks.type_id[:, None], mach.mtype[None, :]] \
+            / mach.speed[None, :]
+        energy_nm = eet_nm * (tables.power[mach.mtype, 1]
+                              * mach.power_scale)[None, :]
     else:
         eet_nm, energy_nm = const
     head = jnp.where(in_batch.any(),
@@ -229,9 +240,10 @@ def register_policy(name: str, fn: PolicyFn) -> int:
 def dispatch(policy_id: jnp.ndarray, state: S.SimState,
              tables: S.StaticTables, lcap: int,
              cancel_infeasible: bool | jnp.ndarray,
-             const: tuple | None = None) -> Decision:
+             const: tuple | None = None,
+             up: jnp.ndarray | None = None) -> Decision:
     """Run the selected policy + the cancellation wrapper."""
-    view = build_view(state, tables, lcap, const)
+    view = build_view(state, tables, lcap, const, up)
     branches = [
         (lambda fn: (lambda args: fn(*args)))(SCHEDULERS[n])
         for n in POLICY_NAMES

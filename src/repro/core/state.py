@@ -31,9 +31,10 @@ COMPLETED = 4        # finished before its deadline
 CANCELLED = 5        # scheduler cancelled (E2C "canceled tasks" pool)
 MISSED_QUEUE = 6     # deadline expired while waiting (batch or machine queue)
 MISSED_RUNNING = 7   # deadline expired while executing -> dropped from machine
+PREEMPTED = 8        # killed by a machine failure / spot reclaim (kill mode)
 
-NUM_STATUSES = 8
-TERMINAL = (COMPLETED, CANCELLED, MISSED_QUEUE, MISSED_RUNNING)
+NUM_STATUSES = 9
+TERMINAL = (COMPLETED, CANCELLED, MISSED_QUEUE, MISSED_RUNNING, PREEMPTED)
 
 INF = jnp.float32(jnp.inf)
 
@@ -70,13 +71,64 @@ class TaskTable:
 @register_pytree
 @dataclasses.dataclass
 class MachineState:
-    """One row per machine."""
+    """One row per machine.
+
+    ``speed``/``power_scale`` are the machine's DVFS operating point,
+    copied from :class:`MachineDynamics` at init: execution time is
+    ``EET / speed`` and both idle and active power are multiplied by
+    ``power_scale``.  They live here (not only in the dynamics tables) so
+    every engine phase can read them without threading the dynamics.
+    """
 
     mtype: jnp.ndarray        # i32 (M,)  row of the power table / EET column
     running: jnp.ndarray      # i32 (M,)  task id currently executing, -1 idle
     busy_until: jnp.ndarray   # f32 (M,)  completion time of `running`
     active_time: jnp.ndarray  # f32 (M,)  accumulated execution seconds
     energy: jnp.ndarray       # f32 (M,)  accumulated *active* energy (J)
+    speed: jnp.ndarray        # f32 (M,)  DVFS speed multiplier (EET /= speed)
+    power_scale: jnp.ndarray  # f32 (M,)  DVFS power multiplier
+
+
+@register_pytree
+@dataclasses.dataclass
+class MachineDynamics:
+    """Dynamic-scenario description of the fleet (fixed shape, vmappable).
+
+    Availability is a trace of up to K down-intervals per machine
+    (``down_start[m, k] <= t < down_end[m, k]`` means machine ``m`` is
+    unavailable at ``t``); pad unused intervals with ``inf``.  A down
+    transition preempts the running task and flushes the machine queue:
+    with ``kill[m]`` the evicted tasks go to the terminal ``PREEMPTED``
+    pool (spot reclaim), otherwise they are requeued to the batch queue
+    and restart from scratch (fail/repair).  Partial energy for the work
+    already done is charged either way.
+
+    ``speed``/``power_scale`` are per-machine DVFS multipliers applied to
+    the EET rows and to idle/active power respectively.
+    """
+
+    speed: jnp.ndarray        # f32 (M,)  execution-speed multiplier
+    power_scale: jnp.ndarray  # f32 (M,)  idle/active power multiplier
+    down_start: jnp.ndarray   # f32 (M, K) interval starts (inf = unused)
+    down_end: jnp.ndarray     # f32 (M, K) interval ends   (inf = open/unused)
+    kill: jnp.ndarray         # bool (M,) True: evictions kill, else requeue
+
+
+def static_dynamics(n_machines: int, n_intervals: int = 1) -> MachineDynamics:
+    """A no-op scenario: full speed, nominal power, never down."""
+    return MachineDynamics(
+        speed=jnp.ones((n_machines,), jnp.float32),
+        power_scale=jnp.ones((n_machines,), jnp.float32),
+        down_start=jnp.full((n_machines, n_intervals), jnp.inf, jnp.float32),
+        down_end=jnp.full((n_machines, n_intervals), jnp.inf, jnp.float32),
+        kill=jnp.zeros((n_machines,), bool),
+    )
+
+
+def machine_up(dyn: MachineDynamics, t: jnp.ndarray) -> jnp.ndarray:
+    """(M,) bool: machine available (not inside any down interval) at t."""
+    down = (dyn.down_start <= t) & (t < dyn.down_end)
+    return ~jnp.any(down, axis=-1)
 
 
 @register_pytree
@@ -90,6 +142,8 @@ class SimState:
     seq_counter: jnp.ndarray  # i32 () next mapping sequence number
     rr_ptr: jnp.ndarray       # i32 () round-robin machine pointer
     n_events: jnp.ndarray     # i32 () processed event count (guard/telemetry)
+    n_preempts: jnp.ndarray   # i32 (N,) forced evictions per task (running
+    #                           or queued on a machine that went down)
     mq_count: jnp.ndarray     # i32 (M,) tasks waiting per machine queue —
     #                           incrementally maintained (exact int math),
     #                           replaces an O(N*M) recount per drain step
@@ -105,15 +159,24 @@ class StaticTables:
     noise: jnp.ndarray      # f32 (N,) multiplicative actual/expected exec time
 
 
-def init_state(tasks: TaskTable, mtype: jnp.ndarray) -> SimState:
+def init_state(tasks: TaskTable, mtype: jnp.ndarray,
+               dynamics: MachineDynamics | None = None) -> SimState:
     n = tasks.arrival.shape[0]
     m = mtype.shape[0]
+    if dynamics is None:
+        speed = jnp.ones((m,), jnp.float32)
+        power_scale = jnp.ones((m,), jnp.float32)
+    else:
+        speed = dynamics.speed.astype(jnp.float32)
+        power_scale = dynamics.power_scale.astype(jnp.float32)
     machines = MachineState(
         mtype=mtype.astype(jnp.int32),
         running=jnp.full((m,), -1, jnp.int32),
         busy_until=jnp.zeros((m,), jnp.float32),
         active_time=jnp.zeros((m,), jnp.float32),
         energy=jnp.zeros((m,), jnp.float32),
+        speed=speed,
+        power_scale=power_scale,
     )
     tasks = TaskTable(
         arrival=tasks.arrival.astype(jnp.float32),
@@ -132,6 +195,7 @@ def init_state(tasks: TaskTable, mtype: jnp.ndarray) -> SimState:
         seq_counter=jnp.int32(0),
         rr_ptr=jnp.int32(0),
         n_events=jnp.int32(0),
+        n_preempts=jnp.zeros((n,), jnp.int32),
         mq_count=jnp.zeros((m,), jnp.int32),
     )
 
@@ -141,10 +205,12 @@ def is_terminal(status: jnp.ndarray) -> jnp.ndarray:
 
 
 def exec_time(tables: StaticTables, tasks: TaskTable, task_id: jnp.ndarray,
-              mtype: jnp.ndarray) -> jnp.ndarray:
-    """Actual execution time of `task_id` on a machine of type `mtype`."""
+              mtype: jnp.ndarray,
+              speed: jnp.ndarray | float = 1.0) -> jnp.ndarray:
+    """Actual execution time of `task_id` on a machine of type `mtype`
+    running at DVFS `speed` (EET scaled by 1/speed)."""
     ttype = tasks.type_id[task_id]
-    return tables.eet[ttype, mtype] * tables.noise[task_id]
+    return tables.eet[ttype, mtype] * tables.noise[task_id] / speed
 
 
 def queue_count(tasks: TaskTable, m: int | jnp.ndarray) -> jnp.ndarray:
@@ -163,10 +229,12 @@ def queued_work(tasks: TaskTable, tables: StaticTables,
     """(M,) total *expected* work waiting in each machine's queue.
 
     Deliberately uses EET (not noise-adjusted actual times): the scheduler
-    only knows expectations, as in E2C.
+    only knows expectations, as in E2C.  The DVFS speed IS known to the
+    system, so expectations are scaled by it.
     """
     n_machines = machines.mtype.shape[0]
-    per_task = tables.eet[tasks.type_id[:, None], machines.mtype[None, :]]
+    per_task = tables.eet[tasks.type_id[:, None], machines.mtype[None, :]] \
+        / machines.speed[None, :]
     mask = (tasks.status == IN_MQ)[:, None] & (
         tasks.machine[:, None] == jnp.arange(n_machines)[None, :])
     return jnp.sum(jnp.where(mask, per_task, 0.0), axis=0)

@@ -1,9 +1,16 @@
-"""Workload generation and trace loading (E2C "workload" component).
+"""Workload + scenario generation and trace loading (E2C "workload"
+component, grown into the dynamic-scenario layer).
 
 E2C's workload component generates task arrivals and lets the user load a
-trace CSV.  We support both: synthetic generators (Poisson / uniform / bursty
-arrival processes with a task-type mixture and deadline slack factors) and the
-E2C trace format ``task_id,task_type,arrival_time[,deadline]``.
+trace CSV.  We support both: synthetic generators (Poisson / uniform /
+bursty / diurnal / Markov on-off arrival processes with a task-type
+mixture and deadline slack factors) and the E2C trace format
+``task_id,task_type,arrival_time[,deadline]``.
+
+A :class:`Scenario` bundles a workload with *machine dynamics* — per-
+machine availability traces (fail/repair or spot preemption) and DVFS
+operating points — so one object describes everything that varies across
+a Monte-Carlo sweep cell (see ``launch/sim.py``).
 """
 from __future__ import annotations
 
@@ -103,6 +110,193 @@ def bursty_workload(n_tasks: int, rate: float, n_task_types: int, *,
         mean_eet = np.ones(n_task_types, np.float32)
     deadline = arrival + slack * mean_eet[type_id]
     return Workload(arrival, type_id, deadline.astype(np.float32))
+
+
+def diurnal_workload(n_tasks: int, base_rate: float, n_task_types: int, *,
+                     amplitude: float = 0.8, period: float = 120.0,
+                     mean_eet: np.ndarray | None = None, slack: float = 3.0,
+                     slack_jitter: float = 0.5, seed: int = 0) -> Workload:
+    """Non-homogeneous Poisson with a sinusoidal (diurnal) rate.
+
+    ``rate(t) = base_rate * (1 + amplitude * sin(2*pi*t / period))``,
+    sampled exactly by thinning a ``base_rate * (1 + amplitude)``
+    homogeneous process.  ``amplitude`` must be in [0, 1] so the rate
+    stays nonnegative.  Models the day/night load cycle every serving
+    fleet sees — schedulers that look good at constant rate can miss
+    deadlines through the daily peak.
+    """
+    if not 0.0 <= amplitude <= 1.0:
+        raise ValueError(f"amplitude must be in [0, 1], got {amplitude}")
+    rng = np.random.default_rng(seed)
+    rate_max = base_rate * (1.0 + amplitude)
+    arrival = np.empty(n_tasks, np.float64)
+    t, k = 0.0, 0
+    while k < n_tasks:
+        t += rng.exponential(1.0 / rate_max)
+        rate_t = base_rate * (1.0 + amplitude * np.sin(2 * np.pi * t / period))
+        if rng.random() * rate_max <= rate_t:
+            arrival[k] = t
+            k += 1
+    arrival = arrival.astype(np.float32)
+    type_id = rng.integers(0, n_task_types, n_tasks)
+    if mean_eet is None:
+        mean_eet = np.ones(n_task_types, np.float32)
+    jitter = rng.lognormal(0.0, slack_jitter, size=n_tasks)
+    deadline = arrival + slack * jitter * mean_eet[type_id]
+    return Workload(arrival, type_id, deadline.astype(np.float32))
+
+
+def onoff_workload(n_tasks: int, rate: float, n_task_types: int, *,
+                   mean_on: float = 20.0, mean_off: float = 10.0,
+                   off_rate_frac: float = 0.05,
+                   mean_eet: np.ndarray | None = None, slack: float = 3.0,
+                   slack_jitter: float = 0.5, seed: int = 0) -> Workload:
+    """Markov-modulated on/off bursts (a true 2-state MMPP).
+
+    A two-state continuous-time Markov chain with exponential dwell
+    times: ON emits at ``rate``, OFF at ``off_rate_frac * rate``.  Unlike
+    ``bursty_workload`` (iid per-gap rate mixing) the burst *lengths* are
+    correlated, so machine queues saturate and drain in waves.
+    """
+    rng = np.random.default_rng(seed)
+    arrival = np.empty(n_tasks, np.float64)
+    t, k = 0.0, 0
+    on = True
+    t_switch = rng.exponential(mean_on)
+    while k < n_tasks:
+        r = rate if on else max(rate * off_rate_frac, 1e-9)
+        gap = rng.exponential(1.0 / r)
+        if t + gap >= t_switch:
+            # memoryless: restart the draw from the switch point
+            t = t_switch
+            on = not on
+            t_switch = t + rng.exponential(mean_on if on else mean_off)
+            continue
+        t += gap
+        arrival[k] = t
+        k += 1
+    arrival = arrival.astype(np.float32)
+    type_id = rng.integers(0, n_task_types, n_tasks)
+    if mean_eet is None:
+        mean_eet = np.ones(n_task_types, np.float32)
+    jitter = rng.lognormal(0.0, slack_jitter, size=n_tasks)
+    deadline = arrival + slack * jitter * mean_eet[type_id]
+    return Workload(arrival, type_id, deadline.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Machine dynamics: availability traces + DVFS states
+# ---------------------------------------------------------------------------
+# Canonical DVFS operating points: (speed multiplier, power multiplier).
+# Cubic-ish power-frequency relation: halving frequency cuts dynamic power
+# far more than throughput.
+DVFS_STATES: dict[str, tuple[float, float]] = {
+    "nominal": (1.00, 1.00),
+    "balanced": (0.80, 0.55),
+    "powersave": (0.60, 0.30),
+    "turbo": (1.20, 1.60),
+}
+
+
+def failure_trace(n_machines: int, n_intervals: int, *,
+                  mtbf: float, mttr: float, t0: float = 0.0,
+                  seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Alternating up/down renewal process per machine.
+
+    Up durations ~ Exp(mtbf), down durations ~ Exp(mttr); returns
+    ``(down_start, down_end)`` of shape (M, K), inf-padded — exactly the
+    ``state.MachineDynamics`` encoding.  Use a huge ``mtbf`` for machines
+    that never fail.
+    """
+    rng = np.random.default_rng(seed)
+    down_start = np.full((n_machines, n_intervals), np.inf, np.float32)
+    down_end = np.full((n_machines, n_intervals), np.inf, np.float32)
+    for m in range(n_machines):
+        t = t0
+        for k in range(n_intervals):
+            t += rng.exponential(mtbf)
+            d = rng.exponential(mttr)
+            down_start[m, k] = t
+            down_end[m, k] = t + d
+            t += d
+    return down_start, down_end
+
+
+@dataclass
+class Scenario:
+    """One simulation cell: workload + machine dynamics.
+
+    ``speed``/``power_scale`` are per-machine DVFS multipliers (pick from
+    ``DVFS_STATES`` or set freely), ``down_start``/``down_end`` the
+    (M, K) availability trace, ``kill`` the per-machine eviction
+    semantics (True = spot reclaim kills, False = fail/repair requeues).
+    ``dynamics()`` converts to the device-side pytree the engine takes.
+    """
+
+    workload: Workload
+    speed: np.ndarray           # (M,)
+    power_scale: np.ndarray     # (M,)
+    down_start: np.ndarray      # (M, K)
+    down_end: np.ndarray        # (M, K)
+    kill: np.ndarray            # (M,) bool
+    name: str = ""
+
+    def __post_init__(self):
+        self.speed = np.asarray(self.speed, np.float32)
+        self.power_scale = np.asarray(self.power_scale, np.float32)
+        self.down_start = np.asarray(self.down_start, np.float32)
+        self.down_end = np.asarray(self.down_end, np.float32)
+        self.kill = np.asarray(self.kill, bool)
+
+    @property
+    def n_machines(self) -> int:
+        return self.speed.shape[0]
+
+    def dynamics(self):
+        import jax.numpy as jnp
+        from repro.core.state import MachineDynamics
+        return MachineDynamics(
+            speed=jnp.asarray(self.speed),
+            power_scale=jnp.asarray(self.power_scale),
+            down_start=jnp.asarray(self.down_start),
+            down_end=jnp.asarray(self.down_end),
+            kill=jnp.asarray(self.kill),
+        )
+
+
+def make_scenario(workload: Workload, n_machines: int, *,
+                  fail_rate: float = 0.0, mttr: float = 5.0,
+                  spot: bool = False, dvfs: str | tuple[float, float]
+                  = "nominal", n_intervals: int = 4,
+                  seed: int = 0, name: str = "") -> Scenario:
+    """Convenience scenario builder.
+
+    ``fail_rate`` is failures per simulated second per machine (0 =
+    always-up; mtbf = 1/fail_rate); ``spot`` selects kill semantics;
+    ``dvfs`` names a ``DVFS_STATES`` entry (or gives an explicit
+    (speed, power) pair) applied fleet-wide.
+    """
+    if isinstance(dvfs, str):
+        speed_mult, power_mult = DVFS_STATES[dvfs]
+    else:
+        speed_mult, power_mult = dvfs
+    if fail_rate > 0.0:
+        down_start, down_end = failure_trace(
+            n_machines, n_intervals, mtbf=1.0 / fail_rate, mttr=mttr,
+            seed=seed)
+    else:
+        down_start = np.full((n_machines, n_intervals), np.inf, np.float32)
+        down_end = np.full((n_machines, n_intervals), np.inf, np.float32)
+    return Scenario(
+        workload=workload,
+        speed=np.full(n_machines, speed_mult, np.float32),
+        power_scale=np.full(n_machines, power_mult, np.float32),
+        down_start=down_start,
+        down_end=down_end,
+        kill=np.full(n_machines, spot, bool),
+        name=name or (f"fail={fail_rate:g}" + ("/spot" if spot else "")
+                      + f"/dvfs={dvfs}"),
+    )
 
 
 def load_workload_csv(path_or_text: str, *, n_task_types: int | None = None,

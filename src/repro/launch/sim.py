@@ -23,30 +23,44 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as PS
 
+from repro.core import energy as EN
 from repro.core import engine as E
 from repro.core import schedulers as P
 from repro.core import state as S
 from repro.core.eet import EETTable, synth_eet
-from repro.core.workload import poisson_workload
+from repro.core.workload import make_scenario, poisson_workload
 
 
-def summarize_replica(st: S.SimState, tables: S.StaticTables) -> dict:
-    """Scalar metrics for one replica (traced; used under vmap)."""
+def summarize_replica(st: S.SimState, tables: S.StaticTables,
+                      dynamics: S.MachineDynamics | None = None) -> dict:
+    """Scalar metrics for one replica (traced; used under vmap).
+
+    With ``dynamics`` the summary also reports preemption counts, mean
+    machine availability, and the active/idle energy split with downtime
+    (powered-off machines) subtracted from the idle integral.
+    """
     status = st.tasks.status
     completed = jnp.sum(status == S.COMPLETED)
     missed = jnp.sum((status == S.MISSED_QUEUE)
                      | (status == S.MISSED_RUNNING))
     cancelled = jnp.sum(status == S.CANCELLED)
-    makespan = jnp.max(jnp.where(st.tasks.t_end > 0, st.tasks.t_end, 0.0))
+    preempted = jnp.sum(status == S.PREEMPTED)
+    makespan = EN.makespan(st)
     active_e = jnp.sum(st.machines.energy)
-    idle_t = jnp.maximum(makespan - st.machines.active_time, 0.0)
-    idle_e = jnp.sum(idle_t * tables.power[st.machines.mtype, 0])
+    idle_e = jnp.sum(EN.idle_energy(st, tables, dynamics))
+    avail = jnp.float32(1.0) if dynamics is None else jnp.mean(
+        EN.availability(dynamics, makespan))
     n = status.shape[0]
     return {
         "completed": completed, "missed": missed, "cancelled": cancelled,
+        "preempted": preempted,
+        "requeues": jnp.sum(st.n_preempts) - preempted,
+        "availability": avail,
         "completion_rate": completed / n,
         "makespan": makespan,
         "energy": active_e + idle_e,
+        "active_energy": active_e,
+        "idle_energy": idle_e,
         "mean_response": jnp.sum(jnp.where(status == S.COMPLETED,
                                            st.tasks.t_end - st.tasks.arrival,
                                            0.0)) / jnp.maximum(completed, 1),
@@ -60,6 +74,23 @@ def build_sim_sweep(n_tasks: int, n_machines: int,
     def one(tasks, mtype, tables, policy_id):
         st = E.run_sim(tasks, mtype, tables, policy_id, params)
         return summarize_replica(st, tables)
+
+    return jax.vmap(one)
+
+
+def build_scenario_sweep(n_tasks: int, n_machines: int,
+                         params: E.SimParams = E.SimParams()):
+    """Scenario-axis sweep: like ``build_sim_sweep`` plus a stacked
+    ``MachineDynamics`` input, so a Monte-Carlo grid over failure rates /
+    spot semantics / DVFS states shards like any other replica axis.
+
+    -> f(task_table[R], mtype[R,M], tables[R], policy[R], dynamics[R])
+       -> metrics[R]
+    """
+
+    def one(tasks, mtype, tables, policy_id, dynamics):
+        st = E.run_sim(tasks, mtype, tables, policy_id, params, dynamics)
+        return summarize_replica(st, tables, dynamics)
 
     return jax.vmap(one)
 
@@ -137,6 +168,62 @@ def make_replicas(n_replicas: int, n_tasks: int, n_machines: int,
             stack(tabs), jnp.asarray(pids, jnp.int32))
 
 
+def make_scenario_replicas(n_replicas: int, n_tasks: int, n_machines: int,
+                           n_task_types: int = 4, n_machine_types: int = 4,
+                           *, policies: list[str] | None = None,
+                           fail_rates: list[float] | None = None,
+                           dvfs_states: list[str] | None = None,
+                           spot_frac: float = 0.5, mttr: float = 4.0,
+                           n_intervals: int = 4, rate: float = 4.0,
+                           seed: int = 0) -> tuple:
+    """Host-side scenario grid: (failure rate x DVFS state x policy)
+    cells, one replica each, stacked for one jitted
+    ``build_scenario_sweep`` call.  Eviction semantics is NOT a grid
+    axis: each replica draws kill-vs-requeue as an independent Bernoulli
+    (``spot_frac``) — pin it to 0.0 or 1.0 to compare the two cleanly.
+
+    Returns ``(task_tables, mtypes, tables, policy_ids, dynamics)`` with a
+    leading replica axis on every leaf.
+    """
+    policies = policies or ["mct", "minmin", "ee_mct"]
+    fail_rates = fail_rates if fail_rates is not None else [0.0, 0.05, 0.2]
+    dvfs_states = dvfs_states or ["nominal", "powersave"]
+    n_f, n_d = len(fail_rates), len(dvfs_states)
+    rng = np.random.default_rng(seed)
+    tts, mts, tabs, pids, dyns = [], [], [], [], []
+    for r in range(n_replicas):
+        eet = synth_eet(n_task_types, n_machine_types,
+                        inconsistency=0.3, seed=seed + r)
+        power = np.stack([
+            rng.uniform(20, 60, n_machine_types),
+            rng.uniform(80, 300, n_machine_types)], axis=1)
+        wl = poisson_workload(n_tasks, rate=rate,
+                              n_task_types=n_task_types,
+                              mean_eet=eet.eet.mean(1), slack=4.0,
+                              seed=seed + 7919 * r)
+        # mixed-radix decomposition r -> (fail, dvfs, policy) so the
+        # grid axes never alias (spot stays an independent random draw)
+        scen = make_scenario(
+            wl, n_machines,
+            fail_rate=fail_rates[r % n_f],
+            mttr=mttr,
+            spot=(rng.random() < spot_frac),
+            dvfs=dvfs_states[(r // n_f) % n_d],
+            n_intervals=n_intervals, seed=seed + 31 * r)
+        noise = rng.lognormal(0.0, 0.1, n_tasks).astype(np.float32)
+        tts.append(wl.to_task_table())
+        mts.append(rng.integers(0, n_machine_types, n_machines))
+        tabs.append(E.make_tables(eet, power.astype(np.float32), n_tasks,
+                                  noise=noise))
+        pids.append(P.POLICY_IDS[
+            policies[(r // (n_f * n_d)) % len(policies)]])
+        dyns.append(scen.dynamics())
+    stack = lambda trees: jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees)
+    return (stack(tts), jnp.asarray(np.stack(mts), jnp.int32),
+            stack(tabs), jnp.asarray(pids, jnp.int32), stack(dyns))
+
+
 @dataclass
 class SimSweepArtifacts:
     jitted: Any
@@ -148,9 +235,15 @@ def build_sharded_sweep(mesh, n_replicas: int, n_tasks: int,
                         n_machines: int, *, n_task_types: int = 4,
                         n_machine_types: int = 4,
                         params: E.SimParams = E.SimParams(),
+                        scenarios: bool = False, n_intervals: int = 4,
                         abstract: bool = False) -> SimSweepArtifacts:
-    """Shard the replica axis over every mesh axis (pod x data x model)."""
-    sweep = build_sim_sweep(n_tasks, n_machines, params)
+    """Shard the replica axis over every mesh axis (pod x data x model).
+
+    With ``scenarios=True`` the sweep carries a stacked
+    ``MachineDynamics`` input (failure traces + DVFS states) — the
+    scenario axis shards exactly like the workload/policy axes."""
+    sweep = (build_scenario_sweep if scenarios else build_sim_sweep)(
+        n_tasks, n_machines, params)
     axes = tuple(mesh.axis_names)
     rspec = PS(axes)           # replicas over all axes jointly
     ns = NamedSharding(mesh, rspec)
@@ -184,6 +277,24 @@ def build_sharded_sweep(mesh, n_replicas: int, n_tasks: int,
                   jax.ShapeDtypeStruct((n_replicas, n_machines), jnp.int32),
                   tables,
                   jax.ShapeDtypeStruct((n_replicas,), jnp.int32))
+        if scenarios:
+            dyn = S.MachineDynamics(
+                speed=jax.ShapeDtypeStruct((n_replicas, n_machines),
+                                           jnp.float32),
+                power_scale=jax.ShapeDtypeStruct((n_replicas, n_machines),
+                                                 jnp.float32),
+                down_start=jax.ShapeDtypeStruct(
+                    (n_replicas, n_machines, n_intervals), jnp.float32),
+                down_end=jax.ShapeDtypeStruct(
+                    (n_replicas, n_machines, n_intervals), jnp.float32),
+                kill=jax.ShapeDtypeStruct((n_replicas, n_machines),
+                                          jnp.bool_),
+            )
+            inputs = inputs + (dyn,)
+    elif scenarios:
+        inputs = make_scenario_replicas(n_replicas, n_tasks, n_machines,
+                                        n_task_types, n_machine_types,
+                                        n_intervals=n_intervals)
     else:
         inputs = make_replicas(n_replicas, n_tasks, n_machines,
                                n_task_types, n_machine_types)

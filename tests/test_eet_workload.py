@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis optional (dev extra)
 
 from repro.core.eet import (EETTable, eet_from_roofline, homogeneous_eet,
                             load_eet_csv, save_eet_csv, synth_eet,

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis optional (dev extra)
 
 from repro.core import engine as E
 from repro.core import ref_engine as R

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis optional (dev extra)
 
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          compress_decompress, compress_init,

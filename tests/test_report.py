@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis optional (dev extra)
 
 from repro.core import engine as E
 from repro.core import report as R

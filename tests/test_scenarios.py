@@ -1,0 +1,274 @@
+"""Dynamic-scenario subsystem: failures, preemption, DVFS.
+
+Parity (JAX engine == plain-Python oracle) under availability traces and
+DVFS states, plus closed-form checks of preemption requeue/kill
+semantics, partial-energy accounting, and DVFS-scaled execution.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis optional (dev extra)
+
+from repro.core import energy as EN
+from repro.core import engine as E
+from repro.core import ref_engine as R
+from repro.core import report
+from repro.core import state as S
+from repro.core.eet import synth_eet
+from repro.core.workload import (DVFS_STATES, Scenario, Workload,
+                                 diurnal_workload, failure_trace,
+                                 make_scenario, onoff_workload,
+                                 poisson_workload)
+
+POLICIES = ["fcfs", "rr", "met", "mct", "ee_met", "ee_mct", "minmin",
+            "maxmin", "edf_mct"]
+
+
+def make_instance(seed, n_tasks, n_machines, n_task_types=3,
+                  n_machine_types=2, rate=3.0, slack=4.0):
+    rng = np.random.default_rng(seed)
+    eet = synth_eet(n_task_types, n_machine_types, inconsistency=0.4,
+                    seed=seed)
+    power = np.stack([rng.uniform(10, 50, n_machine_types),
+                      rng.uniform(60, 200, n_machine_types)],
+                     axis=1).astype(np.float32)
+    wl = poisson_workload(n_tasks, rate=rate, n_task_types=n_task_types,
+                          mean_eet=eet.eet.mean(1), slack=slack,
+                          slack_jitter=0.6, seed=seed + 1)
+    mtype = rng.integers(0, n_machine_types, n_machines)
+    return eet, power, wl, mtype
+
+
+def run_both(eet, power, wl, mtype, policy, scen, lcap=3):
+    st_jax = E.simulate(wl, eet, power, mtype, policy=policy, lcap=lcap,
+                        dynamics=scen.dynamics())
+    ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
+                         power, mtype, policy=policy, lcap=lcap,
+                         speed=scen.speed, power_scale=scen.power_scale,
+                         down_start=scen.down_start,
+                         down_end=scen.down_end, kill=scen.kill)
+    return st_jax, ref
+
+
+def assert_equivalent(st_jax, ref, context=""):
+    np.testing.assert_array_equal(
+        np.asarray(st_jax.tasks.status), ref.status,
+        err_msg=f"status mismatch {context}")
+    np.testing.assert_array_equal(
+        np.asarray(st_jax.tasks.machine), ref.machine,
+        err_msg=f"machine mismatch {context}")
+    np.testing.assert_allclose(
+        np.asarray(st_jax.tasks.t_start), ref.t_start, rtol=1e-5,
+        atol=1e-4, err_msg=f"t_start mismatch {context}")
+    np.testing.assert_allclose(
+        np.asarray(st_jax.tasks.t_end), ref.t_end, rtol=1e-5, atol=1e-4,
+        err_msg=f"t_end mismatch {context}")
+    np.testing.assert_allclose(
+        np.asarray(st_jax.machines.energy), ref.active_energy, rtol=1e-4,
+        atol=1e-2, err_msg=f"energy mismatch {context}")
+    np.testing.assert_array_equal(
+        np.asarray(st_jax.n_preempts), ref.n_preempts,
+        err_msg=f"n_preempts mismatch {context}")
+
+
+# ---------------------------------------------------------------------------
+# Engine-vs-ref parity under dynamic scenarios
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICIES)
+def test_engine_matches_ref_with_failures(policy):
+    eet, power, wl, mtype = make_instance(17, 24, 4)
+    scen = make_scenario(wl, 4, fail_rate=0.15, mttr=3.0, spot=False,
+                        dvfs="powersave", n_intervals=3, seed=7)
+    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen)
+    assert_equivalent(st_jax, ref, f"policy={policy} fail/repair")
+
+
+@pytest.mark.parametrize("policy", ["mct", "minmin", "ee_mct"])
+def test_engine_matches_ref_spot_kill(policy):
+    eet, power, wl, mtype = make_instance(23, 20, 3, rate=4.0, slack=5.0)
+    scen = make_scenario(wl, 3, fail_rate=0.3, mttr=2.0, spot=True,
+                        dvfs="turbo", n_intervals=4, seed=9)
+    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen)
+    assert_equivalent(st_jax, ref, f"policy={policy} spot")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_tasks=st.integers(4, 32),
+    n_machines=st.integers(1, 5),
+    fail_rate=st.floats(0.0, 0.5),
+    mttr=st.floats(0.5, 6.0),
+    spot=st.booleans(),
+    dvfs=st.sampled_from(list(DVFS_STATES)),
+    policy=st.sampled_from(POLICIES),
+)
+def test_engine_matches_ref_scenario_property(seed, n_tasks, n_machines,
+                                              fail_rate, mttr, spot, dvfs,
+                                              policy):
+    eet, power, wl, mtype = make_instance(seed, n_tasks, n_machines)
+    scen = make_scenario(wl, n_machines, fail_rate=fail_rate, mttr=mttr,
+                        spot=spot, dvfs=dvfs, n_intervals=3, seed=seed + 5)
+    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen)
+    assert_equivalent(
+        st_jax, ref,
+        f"seed={seed} policy={policy} fail={fail_rate:.3f} spot={spot}")
+
+
+# ---------------------------------------------------------------------------
+# Closed-form preemption semantics (1 task, 1 machine)
+# ---------------------------------------------------------------------------
+def _one_task_instance(exec_s=10.0, deadline=100.0):
+    eet = np.array([[exec_s]], np.float32)
+    power = np.array([[5.0, 50.0]], np.float32)
+    wl = Workload(np.array([0.0]), np.array([0]), np.array([deadline]))
+    return eet, power, wl
+
+
+def _scen(wl, down, *, kill, speed=1.0, power_scale=1.0):
+    down = np.asarray(down, np.float32).reshape(1, -1, 2)
+    return Scenario(workload=wl,
+                    speed=np.array([speed]),
+                    power_scale=np.array([power_scale]),
+                    down_start=down[:, :, 0], down_end=down[:, :, 1],
+                    kill=np.array([kill]))
+
+
+def test_preemption_requeues_and_restarts():
+    """Fail at t=4, repair at t=6: the task restarts from scratch and
+    completes at 6 + 10; active energy = (4 + 10) * P_active."""
+    eet, power, wl = _one_task_instance()
+    scen = _scen(wl, [[4.0, 6.0]], kill=False)
+    st = E.simulate(wl, eet, power, [0], policy="mct",
+                    dynamics=scen.dynamics())
+    assert int(st.tasks.status[0]) == S.COMPLETED
+    np.testing.assert_allclose(float(st.tasks.t_end[0]), 16.0, atol=1e-4)
+    assert int(st.n_preempts[0]) == 1
+    np.testing.assert_allclose(float(st.machines.energy[0]),
+                               (4.0 + 10.0) * 50.0, rtol=1e-5)
+
+
+def test_preemption_kill_charges_partial_energy():
+    """Spot reclaim at t=4: task is PREEMPTED, 4 s of energy charged."""
+    eet, power, wl = _one_task_instance()
+    scen = _scen(wl, [[4.0, 6.0]], kill=True)
+    st = E.simulate(wl, eet, power, [0], policy="mct",
+                    dynamics=scen.dynamics())
+    assert int(st.tasks.status[0]) == S.PREEMPTED
+    np.testing.assert_allclose(float(st.tasks.t_end[0]), 4.0, atol=1e-4)
+    np.testing.assert_allclose(float(st.machines.energy[0]), 4.0 * 50.0,
+                               rtol=1e-5)
+    rep = report.metrics(st, E.make_tables(
+        np.asarray(eet), power, 1), scen.dynamics())
+    assert rep.preempted == 1 and rep.requeues == 0
+
+
+def test_queued_tasks_flushed_on_failure():
+    """Two tasks on one machine; failure mid-first-task also requeues the
+    queued second task — both eventually complete after repair."""
+    eet = np.array([[10.0]], np.float32)
+    power = np.array([[5.0, 50.0]], np.float32)
+    wl = Workload(np.array([0.0, 0.0]), np.array([0, 0]),
+                  np.array([200.0, 200.0]))
+    scen = Scenario(workload=wl, speed=np.ones(1), power_scale=np.ones(1),
+                    down_start=np.array([[4.0]]),
+                    down_end=np.array([[6.0]]),
+                    kill=np.array([False]))
+    st = E.simulate(wl, eet, power, [0], policy="fcfs",
+                    dynamics=scen.dynamics())
+    status = np.asarray(st.tasks.status)
+    assert (status == S.COMPLETED).all()
+    # queued task was evicted once too (it sat in the machine queue)
+    assert int(np.asarray(st.n_preempts).sum()) == 2
+    # first task restarts at 6 -> done 16; second runs 16 -> 26
+    np.testing.assert_allclose(sorted(np.asarray(st.tasks.t_end)),
+                               [16.0, 26.0], atol=1e-4)
+
+
+def test_dvfs_scales_exec_time_and_power():
+    """speed=2, power_scale=1.6: completion at eet/2, active energy =
+    P_active * 1.6 * eet/2."""
+    eet, power, wl = _one_task_instance()
+    scen = _scen(wl, [[np.inf, np.inf]], kill=False, speed=2.0,
+                 power_scale=1.6)
+    st = E.simulate(wl, eet, power, [0], policy="mct",
+                    dynamics=scen.dynamics())
+    assert int(st.tasks.status[0]) == S.COMPLETED
+    np.testing.assert_allclose(float(st.tasks.t_end[0]), 5.0, atol=1e-4)
+    np.testing.assert_allclose(float(st.machines.energy[0]),
+                               50.0 * 1.6 * 5.0, rtol=1e-5)
+
+
+def test_downtime_and_availability_accounting():
+    span = 20.0
+    dyn = Scenario(workload=None, speed=np.ones(2), power_scale=np.ones(2),
+                   down_start=np.array([[2.0, 8.0], [np.inf, np.inf]]),
+                   down_end=np.array([[5.0, 30.0], [np.inf, np.inf]]),
+                   kill=np.zeros(2, bool)).dynamics()
+    down = np.asarray(EN.downtime(dyn, span))
+    np.testing.assert_allclose(down, [3.0 + 12.0, 0.0])
+    np.testing.assert_allclose(np.asarray(EN.availability(dyn, span)),
+                               [0.25, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+def test_failure_trace_intervals_ordered():
+    ds, de = failure_trace(5, 6, mtbf=10.0, mttr=2.0, seed=3)
+    assert ds.shape == (5, 6) and de.shape == (5, 6)
+    assert (de > ds).all()
+    # intervals are disjoint and increasing per machine
+    assert (ds[:, 1:] >= de[:, :-1]).all()
+
+
+def test_diurnal_workload_modulates_rate():
+    """Arrival density near the sinusoid peak must exceed the trough."""
+    wl = diurnal_workload(4000, 2.0, 2, amplitude=0.9, period=100.0,
+                          seed=0)
+    assert wl.n_tasks == 4000
+    assert (np.diff(wl.arrival) >= 0).all()
+    phase = (wl.arrival % 100.0) / 100.0
+    peak = ((phase > 0.15) & (phase < 0.35)).sum()      # sin ~ +1
+    trough = ((phase > 0.65) & (phase < 0.85)).sum()    # sin ~ -1
+    assert peak > 3 * trough, (peak, trough)
+
+
+def test_onoff_workload_burstier_than_poisson():
+    """MMPP gaps have a higher coefficient of variation than Poisson."""
+    wl = onoff_workload(4000, 8.0, 2, mean_on=10.0, mean_off=10.0,
+                        off_rate_frac=0.02, seed=1)
+    gaps = np.diff(wl.arrival.astype(np.float64))
+    cv = gaps.std() / gaps.mean()
+    assert cv > 1.3, cv     # Poisson would be ~1.0
+
+
+@pytest.mark.parametrize("policy", ["ee_met", "ee_mct", "mct", "minmin"])
+def test_heterogeneous_dvfs_fleet_parity(policy):
+    """Per-machine (non-uniform) speed/power_scale: the energy-aware
+    policies rank machines by DVFS-scaled energy, which must agree
+    between engine and oracle (regression: the oracle once ranked by
+    unscaled active power)."""
+    eet, power, wl, mtype = make_instance(29, 20, 3, rate=3.0, slack=5.0)
+    scen = Scenario(workload=wl,
+                    speed=np.array([1.0, 0.6, 1.2]),
+                    power_scale=np.array([1.0, 0.3, 1.6]),
+                    down_start=np.full((3, 1), np.inf),
+                    down_end=np.full((3, 1), np.inf),
+                    kill=np.zeros(3, bool))
+    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen)
+    assert_equivalent(st_jax, ref, f"policy={policy} hetero DVFS")
+
+
+def test_static_scenario_matches_static_engine():
+    """A no-op dynamics pytree must not change the static result."""
+    eet, power, wl, mtype = make_instance(5, 16, 3)
+    st_plain = E.simulate(wl, eet, power, mtype, policy="mct")
+    st_dyn = E.simulate(wl, eet, power, mtype, policy="mct",
+                        dynamics=S.static_dynamics(3))
+    np.testing.assert_array_equal(np.asarray(st_plain.tasks.status),
+                                  np.asarray(st_dyn.tasks.status))
+    np.testing.assert_allclose(np.asarray(st_plain.machines.energy),
+                               np.asarray(st_dyn.machines.energy),
+                               rtol=1e-6)

@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as E
-from repro.launch.sim import (build_sim_sweep, make_replicas,
+from repro.launch.sim import (build_scenario_sweep, build_sim_sweep,
+                              make_replicas, make_scenario_replicas,
                               summarize_replica)
 
 
@@ -33,6 +34,56 @@ def test_replicas_conserve_tasks():
     total = (np.asarray(out["completed"]) + np.asarray(out["missed"])
              + np.asarray(out["cancelled"]))
     assert (total == 16).all()
+
+
+def test_scenario_sweep_matches_single_runs():
+    """>= 8 scenario variants (failure rates x DVFS states x spot/requeue)
+    vmapped in ONE jitted call == per-replica engine runs."""
+    n_replicas, n_tasks, n_machines = 10, 20, 3
+    inputs = make_scenario_replicas(n_replicas, n_tasks, n_machines,
+                                    fail_rates=[0.0, 0.1, 0.3],
+                                    dvfs_states=["nominal", "powersave"],
+                                    seed=13)
+    sweep = jax.jit(build_scenario_sweep(n_tasks, n_machines))
+    out = sweep(*inputs)
+    for i in range(n_replicas):
+        tt, mt, tb, pid, dyn = jax.tree.map(lambda x: x[i], inputs)
+        st = E.run_sim(tt, mt, tb, pid, dynamics=dyn)
+        single = summarize_replica(st, tb, dyn)
+        for k in ("completed", "missed", "cancelled", "preempted",
+                  "requeues"):
+            assert int(out[k][i]) == int(single[k]), (k, i)
+        np.testing.assert_allclose(float(out["energy"][i]),
+                                   float(single["energy"]), rtol=1e-4)
+        np.testing.assert_allclose(float(out["availability"][i]),
+                                   float(single["availability"]),
+                                   rtol=1e-5)
+
+
+def test_scenario_sweep_conserves_tasks():
+    n_tasks = 16
+    inputs = make_scenario_replicas(9, n_tasks, 3, fail_rates=[0.0, 0.2],
+                                    seed=2)
+    out = build_scenario_sweep(n_tasks, 3)(*inputs)
+    total = (np.asarray(out["completed"]) + np.asarray(out["missed"])
+             + np.asarray(out["cancelled"]) + np.asarray(out["preempted"]))
+    assert (total == n_tasks).all()
+    # availability is a fraction; zero-failure replicas report 1.0
+    av = np.asarray(out["availability"])
+    assert ((av >= 0) & (av <= 1 + 1e-6)).all()
+
+
+def test_failure_rate_degrades_completion():
+    """Sweeping the failure-rate axis with everything else fixed:
+    heavy spot-kill failures cannot complete MORE tasks than none."""
+    inputs0 = make_scenario_replicas(4, 24, 3, fail_rates=[0.0],
+                                     spot_frac=1.0, seed=21)
+    inputs1 = make_scenario_replicas(4, 24, 3, fail_rates=[0.6],
+                                     spot_frac=1.0, mttr=8.0, seed=21)
+    sweep = build_scenario_sweep(24, 3)
+    done0 = int(np.asarray(sweep(*inputs0)["completed"]).sum())
+    done1 = int(np.asarray(sweep(*inputs1)["completed"]).sum())
+    assert done1 <= done0, (done1, done0)
 
 
 def test_policy_variation_across_replicas():
