@@ -21,8 +21,8 @@ from repro.core import engine as E
 from repro.core import ref_engine as RE
 from repro.core import schedulers as P
 from repro.launch.sim import (build_scenario_sweep, build_sim_sweep,
-                              make_replicas, make_scenario_replicas,
-                              run_grouped_sweep)
+                              build_traced_sweep, make_replicas,
+                              make_scenario_replicas, run_grouped_sweep)
 
 N_TASKS, N_MACHINES = 128, 16
 
@@ -48,6 +48,20 @@ def time_scenario_sweep(n_replicas: int) -> tuple[float, float]:
     t0 = time.perf_counter()
     out = sweep(*inputs)
     jax.block_until_ready(out["completed"])
+    dt = time.perf_counter() - t0
+    return dt, dt / n_replicas
+
+
+def time_traced_sweep(n_replicas: int) -> tuple[float, float]:
+    """Replicas with in-jit trace capture on (EXPERIMENTS.md §Perf —
+    the measured cost of the masked trace writes + snapshots)."""
+    inputs = make_replicas(n_replicas, N_TASKS, N_MACHINES, seed=0)
+    sweep = jax.jit(build_traced_sweep(N_TASKS, N_MACHINES))
+    out, _ = sweep(*inputs)                    # compile + warm
+    jax.block_until_ready(out["completed"])
+    t0 = time.perf_counter()
+    out, traces = sweep(*inputs)
+    jax.block_until_ready(traces.n_rows)
     dt = time.perf_counter() - t0
     return dt, dt / n_replicas
 
@@ -101,6 +115,15 @@ def run(out_dir=None, smoke: bool = False) -> dict:
     static_same_n = next(r for r in rows
                          if r["replicas"] == scen_n)["per_replica_ms"]
 
+    # traced variant: TraceBuffer recording inside the jitted loop; the
+    # default-off path must stay at the static numbers above, and the
+    # opt-in cost is bounded (T5, same static baseline as T4)
+    trace_total, trace_per = time_traced_sweep(scen_n)
+    rows.append({"replicas": f"{scen_n} (traced)",
+                 "total_s": round(trace_total, 4),
+                 "per_replica_ms": round(trace_per * 1e3, 3),
+                 "replicas_per_s": round(scen_n / trace_total, 1)})
+
     checks = {
         "T1_jit_beats_python_ref": bool(per_replica_1 < ref_per_replica),
         "T2_vmap_amortizes": bool(per_replica_big
@@ -109,6 +132,8 @@ def run(out_dir=None, smoke: bool = False) -> dict:
             grouped_per * 1e3 < per_replica_big),
         "T4_scenario_overhead_bounded": bool(
             scen_per * 1e3 < 4 * static_same_n),
+        "T5_trace_overhead_bounded": bool(
+            trace_per * 1e3 < 3 * static_same_n),
     }
     payload = {"rows": rows,
                "ref_per_replica_ms": round(ref_per_replica * 1e3, 2),

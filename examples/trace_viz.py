@@ -1,0 +1,55 @@
+"""Trace capture + headless visualization in ~30 lines.
+
+    PYTHONPATH=src python examples/trace_viz.py [outdir]
+
+Runs one dynamic scenario (a machine failure mid-run forces a
+preemption-and-requeue) with ``trace=True``, then renders the four
+chart types to standalone SVG plus a combined HTML report — the files
+committed under ``examples/gallery/`` come from exactly this script.
+See docs/visualization.md for how to read each chart.
+"""
+import sys
+
+import numpy as np
+
+from repro.core import engine, viz
+from repro.core.eet import EETTable
+from repro.core.workload import Scenario, poisson_workload
+
+eet = EETTable(
+    np.array([[3.0, 0.9],
+              [5.0, 1.4]], np.float32),
+    task_types=["obj_det", "speech"],
+    machine_types=["edge-cpu", "edge-gpu"],
+)
+power = np.array([[8.0, 35.0], [15.0, 110.0]], np.float32)
+wl = poisson_workload(40, rate=1.2, n_task_types=2,
+                      mean_eet=eet.eet.mean(axis=1), slack=3.0, seed=0)
+
+# cluster of two CPUs + one GPU; the GPU fails at t=6 and repairs at
+# t=10 (fail/repair semantics: its work is requeued, not killed)
+inf = np.float32(np.inf)
+scen = Scenario(
+    workload=wl,
+    speed=np.ones(3), power_scale=np.ones(3),
+    down_start=np.array([[inf], [inf], [6.0]]),
+    down_end=np.array([[inf], [inf], [10.0]]),
+    kill=np.array([False, False, False]),
+    name="gpu-outage",
+)
+
+final = engine.simulate(wl, eet, power, machine_types=[0, 0, 1],
+                        policy="mct", lcap=4, dynamics=scen.dynamics(),
+                        trace=True)
+
+outdir = sys.argv[1] if len(sys.argv) > 1 else "examples/gallery"
+for name, svg in [
+    ("gantt", viz.gantt(final, dynamics=scen)),
+    ("utilization", viz.utilization(final)),
+    ("queues", viz.queue_depth(final)),
+    ("energy", viz.energy_over_time(final)),
+]:
+    print("wrote", viz.save(f"{outdir}/{name}.svg", svg))
+print("wrote", viz.save(f"{outdir}/report.html",
+                        viz.html_report(final, dynamics=scen,
+                                        title=f"E2C — {scen.name}")))

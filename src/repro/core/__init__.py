@@ -4,6 +4,8 @@ Public API:
     simulate(workload, eet, power, machine_types, policy, ...)  -> SimState
     run_sim / run_sweep          jit-able engine entry points
     metrics / ascii_gantt        reports (headless GUI replacement)
+    TraceBuffer / viz            in-jit trace capture + SVG/HTML charts
+                                 (Gantt, utilization, queues, energy)
     SCHEDULERS / register_policy pluggable scheduling methods
     EETTable / load_eet_csv / synth_eet, workload generators
 """
@@ -13,10 +15,13 @@ from repro.core.eet import (EETTable, default_power, eet_from_roofline,
 from repro.core.energy import total_energy
 from repro.core.engine import (SimParams, make_tables, run_sim, run_sweep,
                                simulate)
-from repro.core.report import SimReport, ascii_gantt, format_report, metrics
+from repro.core.report import (SimReport, ascii_gantt, format_report,
+                               metrics, trace_table)
 from repro.core.schedulers import (BATCH_POLICIES, POLICY_IDS, POLICY_NAMES,
                                    SCHEDULERS, register_policy)
 from repro.core.state import MachineDynamics, machine_up, static_dynamics
+from repro.core.trace import EVENT_NAMES, TraceBuffer
+from repro.core import viz
 from repro.core.workload import (DVFS_STATES, Scenario, Workload,
                                  bursty_workload, diurnal_workload,
                                  failure_trace, load_workload_csv,
@@ -36,4 +41,6 @@ __all__ = [
     "MachineDynamics", "machine_up", "static_dynamics", "DVFS_STATES",
     "Scenario", "diurnal_workload", "failure_trace", "make_scenario",
     "onoff_workload",
+    # trace capture + headless visualization
+    "TraceBuffer", "EVENT_NAMES", "trace_table", "viz",
 ]

@@ -27,6 +27,13 @@ Event ordering within a timestamp `t` (matches the E2C loop):
 DVFS: each machine's ``speed`` divides its EET row (both the scheduler's
 expectations and actual runtimes) and ``power_scale`` multiplies its
 idle/active power — see ``state.MachineDynamics``.
+
+Tracing: with ``SimParams(trace=True)`` every phase appends its
+transitions to a fixed-capacity ``trace.TraceBuffer`` on the state and
+the loop writes one fleet snapshot per event (docs/visualization.md).
+The default (off) leaves ``SimState.trace`` as ``None`` and compiles
+the exact pre-trace HLO — recording is gated on Python-level ``None``
+checks, never ``lax.cond``.
 """
 from __future__ import annotations
 
@@ -41,6 +48,7 @@ import numpy as np
 
 from repro.core import schedulers as P
 from repro.core import state as S
+from repro.core import trace as T
 from repro.core.eet import EETTable
 from repro.core.workload import Workload
 
@@ -53,6 +61,8 @@ class SimParams(NamedTuple):
     qcap: int = 1 << 30           # batch-queue capacity
     cancel_infeasible: bool = True
     max_events: int | None = None
+    trace: bool = False           # record TraceBuffer (docs/visualization.md)
+    trace_capacity: int | None = None   # rows; default row_capacity_bound
 
 
 # --------------------------------------------------------------------------
@@ -67,6 +77,11 @@ def _completions(st: S.SimState, tb: S.StaticTables) -> S.SimState:
     dur = jnp.where(done_m, dur, 0.0)
     p_active = tb.power[mach.mtype, 1] * mach.power_scale
 
+    if st.trace is not None:
+        n_m = mach.mtype.shape[0]
+        st = replace(st, trace=T.record(
+            st.trace, st.time, T.EV_COMPLETE, mach.running,
+            jnp.arange(n_m), done_m))
     tasks = replace(
         tasks,
         status=tasks.status.at[tid].set(S.COMPLETED, mode="drop"),
@@ -114,6 +129,10 @@ def _availability(st: S.SimState, tb: S.StaticTables,
     )
     tid_kill = jnp.where(hit & dyn.kill, running0, n)
     tid_req = jnp.where(hit & ~dyn.kill, running0, n)
+    if st.trace is not None:
+        kinds = jnp.where(dyn.kill, T.EV_PREEMPT, T.EV_REQUEUE)
+        st = replace(st, trace=T.record(
+            st.trace, st.time, kinds, running0, jnp.arange(n_m), hit))
     status = tasks.status.at[tid_kill].set(S.PREEMPTED, mode="drop") \
                          .at[tid_req].set(S.IN_BATCH, mode="drop")
     t_end = tasks.t_end.at[tid_kill].set(st.time, mode="drop")
@@ -127,6 +146,10 @@ def _availability(st: S.SimState, tb: S.StaticTables,
     in_down_q = (status == S.IN_MQ) & (machine >= 0) & down[m_of]
     kq = in_down_q & dyn.kill[m_of]
     rq = in_down_q & ~dyn.kill[m_of]
+    if st.trace is not None:
+        kinds = jnp.where(dyn.kill[m_of], T.EV_PREEMPT, T.EV_REQUEUE)
+        st = replace(st, trace=T.record(
+            st.trace, st.time, kinds, jnp.arange(n), machine, in_down_q))
     status = jnp.where(kq, S.PREEMPTED, status)
     t_end = jnp.where(kq, st.time, t_end)
     status = jnp.where(rq, S.IN_BATCH, status)
@@ -148,6 +171,10 @@ def _arrivals(st: S.SimState, qcap: int) -> S.SimState:
     pos = jnp.cumsum(new.astype(jnp.int32))           # 1-based admission rank
     admitted = new & (in_batch + pos <= qcap)
     overflow = new & ~admitted
+    if st.trace is not None:
+        n = tasks.arrival.shape[0]
+        st = replace(st, trace=T.record(
+            st.trace, st.time, T.EV_CANCEL, jnp.arange(n), -1, overflow))
     status = jnp.where(admitted, S.IN_BATCH, tasks.status)
     status = jnp.where(overflow, S.CANCELLED, status)
     t_end = jnp.where(overflow, tasks.arrival, tasks.t_end)
@@ -166,6 +193,10 @@ def _deadline_drops(st: S.SimState, tb: S.StaticTables) -> S.SimState:
     mq_count = st.mq_count - jnp.zeros((n_m,), jnp.int32).at[
         jnp.where(from_mq, tasks.machine, n_m)].add(1, mode="drop")
     st = replace(st, mq_count=mq_count)
+    if st.trace is not None:
+        st = replace(st, trace=T.record(
+            st.trace, st.time, T.EV_MISS_QUEUE, jnp.arange(n),
+            tasks.machine, miss_q))
     status = jnp.where(miss_q, S.MISSED_QUEUE, tasks.status)
     t_end = jnp.where(miss_q, tasks.deadline, tasks.t_end)
 
@@ -173,6 +204,10 @@ def _deadline_drops(st: S.SimState, tb: S.StaticTables) -> S.SimState:
     run_id = jnp.clip(mach.running, 0, n - 1)
     run_dl = tasks.deadline[run_id]
     miss_r = (mach.running >= 0) & (run_dl <= st.time)
+    if st.trace is not None:
+        st = replace(st, trace=T.record(
+            st.trace, st.time, T.EV_MISS_RUNNING, mach.running,
+            jnp.arange(n_m), miss_r))
     tid = jnp.where(miss_r, mach.running, n)
     dur = jnp.where(miss_r, run_dl - tasks.t_start[run_id], 0.0)
     status = status.at[tid].set(S.MISSED_RUNNING, mode="drop")
@@ -219,9 +254,19 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
 
     Each iteration maps or cancels exactly one batch-queue task, so the
     loop is bounded by the current batch-queue population (tighter than
-    the task count n — fewer worst-case trips per event)."""
+    the task count n — fewer worst-case trips per event).
+
+    Tracing note: cancel rows are recorded *after* the loop by diffing
+    the status column (one masked write per event, in task-id order)
+    instead of inside ``_apply_decision`` — per-iteration scatters in
+    this inner loop were the bulk of the tracing overhead.  The
+    reference engine emits its drain cancels in the same task-id order.
+    """
     n = st.tasks.arrival.shape[0]
     bound = jnp.sum(st.tasks.status == S.IN_BATCH).astype(jnp.int32)
+    status_before = st.tasks.status
+    trace = st.trace
+    st = replace(st, trace=None)      # keep the buffers out of the carry
 
     def cond(c):
         _, cont, iters = c
@@ -236,7 +281,12 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
 
     st, _, _ = jax.lax.while_loop(cond, body, (st, jnp.bool_(True),
                                                jnp.int32(0)))
-    return st
+    if trace is not None:
+        cancelled = (status_before != S.CANCELLED) & (
+            st.tasks.status == S.CANCELLED)
+        trace = T.record(trace, st.time, T.EV_CANCEL, jnp.arange(n), -1,
+                         cancelled)
+    return replace(st, trace=trace)
 
 
 def _start_tasks(st: S.SimState, tb: S.StaticTables,
@@ -254,6 +304,9 @@ def _start_tasks(st: S.SimState, tb: S.StaticTables,
     pick = jnp.argmin(seqs, axis=0).astype(jnp.int32)        # (M,)
     has = queued.any(axis=0)
     start = idle & has
+    if st.trace is not None:
+        st = replace(st, trace=T.record(
+            st.trace, st.time, T.EV_START, pick, jnp.arange(n_m), start))
     tid = jnp.where(start, pick, n)
     dur = S.exec_time(tb, tasks, jnp.clip(pick, 0, n - 1), mach.mtype,
                       mach.speed)
@@ -307,10 +360,17 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
     """
     st = S.init_state(tasks, mtype, dynamics)
     n = tasks.arrival.shape[0]
+    n_m = mtype.shape[-1]
     max_events = params.max_events or (4 * n + 16)
     if dynamics is not None and params.max_events is None:
         # every down interval contributes at most 2 extra events
-        max_events += 2 * dynamics.down_start.shape[-1] * mtype.shape[-1]
+        max_events += 2 * dynamics.down_start.shape[-1] * n_m
+    if params.trace:
+        k = dynamics.down_start.shape[-1] if dynamics is not None else 0
+        cap = params.trace_capacity or T.row_capacity_bound(
+            n, params.lcap, n_m, k)
+        st = replace(st, trace=T.make_buffer(cap, max_events, n_m,
+                                             pad=max(n, n_m)))
     policy_id = jnp.asarray(policy_id, jnp.int32)
 
     # simulation invariants hoisted out of the event/drain loops: the
@@ -338,6 +398,8 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
         st = _deadline_drops(st, tables)
         st = _drain(st, tables, policy_id, params, const, up)
         st = _start_tasks(st, tables, up)
+        if params.trace:
+            st = replace(st, trace=T.snapshot(st.trace, st))
         return replace(st, n_events=st.n_events + 1)
 
     return jax.lax.while_loop(cond, body, st)
@@ -359,15 +421,21 @@ def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
              *, lcap: int = 4, qcap: int | None = None,
              cancel_infeasible: bool = True,
              noise: np.ndarray | None = None,
-             dynamics: S.MachineDynamics | None = None) -> S.SimState:
+             dynamics: S.MachineDynamics | None = None,
+             trace: bool = False,
+             trace_capacity: int | None = None) -> S.SimState:
     """Host-friendly wrapper: one replica, named policy.
 
     ``dynamics`` makes the fleet dynamic (failures / spot preemption /
     DVFS) — build one with ``workload.Scenario.dynamics()`` or
-    ``state.static_dynamics``.
+    ``state.static_dynamics``.  ``trace=True`` attaches a
+    ``trace.TraceBuffer`` to the returned state (``.trace``) — the event
+    stream + fleet snapshots behind ``core/viz.py`` (see
+    docs/visualization.md).
     """
     params = SimParams(lcap=lcap, qcap=qcap or (1 << 30),
-                       cancel_infeasible=cancel_infeasible)
+                       cancel_infeasible=cancel_infeasible, trace=trace,
+                       trace_capacity=trace_capacity)
     tables = make_tables(eet, power, workload.n_tasks, noise=noise)
     mtype = jnp.asarray(np.asarray(machine_types, np.int32))
     return run_sim(workload.to_task_table(), mtype, tables,

@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import state as S
+from repro.core import trace as TR
 
 BIG = 1e30
 
@@ -30,6 +31,8 @@ class RefResult:
     active_time: np.ndarray       # (M,)
     makespan: float
     n_preempts: np.ndarray | None = None    # (N,) forced evictions
+    trace: list[tuple] | None = None        # (time, kind, task, machine)
+    #      rows in the exact order the jitted engine records them
 
 
 @dataclass
@@ -51,6 +54,7 @@ class _Sim:
     down_start: np.ndarray | None = None     # (M, K) inf-padded
     down_end: np.ndarray | None = None       # (M, K)
     kill: np.ndarray | None = None           # (M,) bool
+    trace: list[tuple] | None = None         # enabled by simulate_ref
 
     status: np.ndarray = field(init=False)
     machine: np.ndarray = field(init=False)
@@ -104,6 +108,11 @@ class _Sim:
         return not np.any((self.down_start[m] <= self.time)
                           & (self.time < self.down_end[m]))
 
+    def emit(self, kind: int, t: int, m: int):
+        """Trace hook: same rows, same order as engine.py's T.record."""
+        if self.trace is not None:
+            self.trace.append((float(self.time), int(kind), int(t), int(m)))
+
     def queue_of(self, m: int) -> list[int]:
         ids = np.nonzero((self.status == S.IN_MQ) & (self.machine == m))[0]
         return sorted(ids, key=lambda i: self.seq[i])
@@ -126,6 +135,7 @@ class _Sim:
             t = self.running[m]
             if t >= 0 and self.busy_until[m] <= self.time:
                 dur = self.busy_until[m] - self.t_start[t]
+                self.emit(TR.EV_COMPLETE, t, m)
                 self.status[t] = S.COMPLETED
                 self.t_end[t] = self.busy_until[m]
                 self.energy[m] += self.p_active(m) * dur
@@ -133,13 +143,22 @@ class _Sim:
                 self.running[m] = -1
 
     def availability(self):
-        """Machines inside a down interval evict running + queued work."""
+        """Machines inside a down interval evict running + queued work.
+
+        Two passes — running tasks in machine-id order, then queued
+        tasks in task-id order — matching the engine's two masked
+        scatters, so the emitted trace rows line up exactly.  (The
+        per-machine updates are independent, so the final state is the
+        same either way.)
+        """
         for m in range(len(self.mtype)):
             if self.up(m):
                 continue
             t = self.running[m]
             if t >= 0:
                 dur = self.time - self.t_start[t]
+                self.emit(TR.EV_PREEMPT if self.kill[m] else TR.EV_REQUEUE,
+                          t, m)
                 self.energy[m] += self.p_active(m) * dur
                 self.active_time[m] += dur
                 self.running[m] = -1
@@ -152,15 +171,20 @@ class _Sim:
                     self.machine[t] = -1
                     self.seq[t] = np.iinfo(np.int32).max
                     self.t_start[t] = -1.0
-            for t in self.queue_of(m):
-                self.n_preempts[t] += 1
-                if self.kill[m]:
-                    self.status[t] = S.PREEMPTED
-                    self.t_end[t] = self.time
-                else:
-                    self.status[t] = S.IN_BATCH
-                    self.machine[t] = -1
-                    self.seq[t] = np.iinfo(np.int32).max
+        for t in range(len(self.arrival)):
+            m = self.machine[t]
+            if self.status[t] != S.IN_MQ or m < 0 or self.up(m):
+                continue
+            self.emit(TR.EV_PREEMPT if self.kill[m] else TR.EV_REQUEUE,
+                      t, m)
+            self.n_preempts[t] += 1
+            if self.kill[m]:
+                self.status[t] = S.PREEMPTED
+                self.t_end[t] = self.time
+            else:
+                self.status[t] = S.IN_BATCH
+                self.machine[t] = -1
+                self.seq[t] = np.iinfo(np.int32).max
 
     def arrivals(self):
         new = np.nonzero((self.status == S.NOT_ARRIVED)
@@ -170,6 +194,7 @@ class _Sim:
             if n_in_batch + k + 1 <= self.qcap:
                 self.status[t] = S.IN_BATCH
             else:
+                self.emit(TR.EV_CANCEL, t, -1)
                 self.status[t] = S.CANCELLED
                 self.t_end[t] = self.arrival[t]
 
@@ -177,12 +202,14 @@ class _Sim:
         for t in range(len(self.arrival)):
             if self.status[t] in (S.IN_BATCH, S.IN_MQ) \
                     and self.deadline[t] <= self.time:
+                self.emit(TR.EV_MISS_QUEUE, t, self.machine[t])
                 self.status[t] = S.MISSED_QUEUE
                 self.t_end[t] = self.deadline[t]
         for m in range(len(self.mtype)):
             t = self.running[m]
             if t >= 0 and self.deadline[t] <= self.time:
                 dur = self.deadline[t] - self.t_start[t]
+                self.emit(TR.EV_MISS_RUNNING, t, m)
                 self.status[t] = S.MISSED_RUNNING
                 self.t_end[t] = self.deadline[t]
                 self.energy[m] += self.p_active(m) * dur
@@ -249,15 +276,17 @@ class _Sim:
         raise ValueError(f"unknown policy {self.policy}")
 
     def drain(self):
+        cancelled: list[int] = []
         while True:
             dec = self.decide()
             if dec is None:
-                return
+                break
             t, m = dec
             rooms = [mm for mm in range(len(self.mtype))
                      if self.room(mm) and self.up(mm)]
             best = min(self.avail(mm) + self.expected(t, mm) for mm in rooms)
             if self.cancel_infeasible and best > self.deadline[t]:
+                cancelled.append(t)
                 self.status[t] = S.CANCELLED
                 self.t_end[t] = self.time
             else:
@@ -266,6 +295,10 @@ class _Sim:
                 self.seq[t] = self.seq_counter
                 self.seq_counter += 1
                 self.rr_ptr = (m + 1) % len(self.mtype)
+        # engine.py records drain cancels once per event via a status
+        # diff (task-id order), not per drain iteration — mirror that
+        for t in sorted(cancelled):
+            self.emit(TR.EV_CANCEL, t, -1)
 
     def start_tasks(self):
         for m in range(len(self.mtype)):
@@ -273,6 +306,7 @@ class _Sim:
                 queue = self.queue_of(m)
                 if queue:
                     t = queue[0]
+                    self.emit(TR.EV_START, t, m)
                     self.status[t] = S.RUNNING
                     self.t_start[t] = self.time
                     self.busy_until[m] = self.time + self.exec_time(t, m)
@@ -319,7 +353,8 @@ class _Sim:
                          self.t_start.copy(), self.t_end.copy(),
                          self.energy.copy(), self.active_time.copy(),
                          float(max(self.t_end.max(), 0.0)),
-                         self.n_preempts.copy())
+                         self.n_preempts.copy(),
+                         None if self.trace is None else list(self.trace))
 
 
 def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
@@ -327,10 +362,12 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                  cancel_infeasible=True, noise=None,
                  speed=None, power_scale=None, down_start=None,
                  down_end=None, kill=None,
-                 max_events=None) -> RefResult:
+                 max_events=None, trace=False) -> RefResult:
     """Oracle run.  The ``speed``/``power_scale``/``down_*``/``kill``
     kwargs mirror ``state.MachineDynamics`` (all default to the static
-    fleet)."""
+    fleet).  ``trace=True`` collects the ``(time, kind, task, machine)``
+    event stream in the same order the jitted engine records it —
+    ``tests/test_trace.py`` asserts the two streams are identical."""
     arrival = np.asarray(arrival, np.float64)
     if noise is None:
         noise = np.ones(len(arrival))
@@ -343,5 +380,6 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                policy, lcap, qcap, cancel_infeasible,
                speed=_f64(speed), power_scale=_f64(power_scale),
                down_start=_f64(down_start), down_end=_f64(down_end),
-               kill=None if kill is None else np.asarray(kill, bool))
+               kill=None if kill is None else np.asarray(kill, bool),
+               trace=[] if trace else None)
     return sim.run(max_events)

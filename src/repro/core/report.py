@@ -117,6 +117,21 @@ def metrics(st: S.SimState, tables: S.StaticTables,
     )
 
 
+def trace_table(trace_or_state) -> list[dict]:
+    """Transition log from a trace (``simulate(..., trace=True)``): one
+    row per lifecycle transition, in processing order — the headless
+    equivalent of watching the GUI animate.  See docs/visualization.md.
+    """
+    from repro.core import trace as T
+    tb, _ = T.resolve(trace_or_state)
+    ev = T.events(tb)
+    return [{
+        "time": float(t), "event": T.EVENT_NAMES[int(k)],
+        "task": int(task), "machine": int(m),
+    } for t, k, task, m in zip(ev["time"], ev["kind"], ev["task"],
+                               ev["machine"])]
+
+
 def task_table(st: S.SimState) -> list[dict]:
     """Per-task event log (the GUI's task panels, as rows)."""
     rows = []

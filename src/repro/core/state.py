@@ -147,6 +147,9 @@ class SimState:
     mq_count: jnp.ndarray     # i32 (M,) tasks waiting per machine queue —
     #                           incrementally maintained (exact int math),
     #                           replaces an O(N*M) recount per drain step
+    trace: Any = None         # trace.TraceBuffer when SimParams.trace is
+    #                           on, else None (tracing compiles out; the
+    #                           engine gates recording on a Python check)
 
 
 @register_pytree

@@ -1,0 +1,293 @@
+"""In-jit trace capture: the event stream behind the visual layer.
+
+The E2C GUI animates every transition (a task leaving the batch queue, a
+machine starting work, a spot reclaim killing a task).  The vectorized
+engine runs thousands of replicas inside one ``lax.while_loop``, so the
+equivalent is a *trace*: fixed-capacity preallocated buffers threaded
+through ``SimState`` and written with masked scatters, recording
+
+* one **transition row** ``(time, kind, task, machine)`` per lifecycle
+  transition (start / complete / preempt / requeue / miss / cancel), in
+  deterministic order (phase order within a timestamp; machine-id or
+  task-id order within a phase — the same order ``ref_engine`` emits), and
+* one **fleet snapshot** per processed event timestamp (batch-queue
+  depth, per-machine queue counts, running task ids, cumulative active
+  energy) — the raw material for utilization / queue-dynamics /
+  energy-over-time charts (``core/viz.py``).
+
+Everything is shape-static, so traced replicas still compose under
+``vmap``/``pjit``.  With ``SimParams(trace=False)`` (the default) the
+buffer is simply absent (``SimState.trace is None``) and the engine
+compiles to exactly the HLO it compiled to before tracing existed —
+recording is gated by a Python-level ``None`` check, not a ``lax.cond``.
+
+Row capacity is sized from the same bounds as ``max_events``: each task
+emits at most one terminal row plus one start/requeue pair per forced
+eviction, and each down interval evicts at most ``1 + lcap`` tasks.  If a
+caller overrides the bound too low, ``n_rows`` keeps counting past
+``capacity`` (overflow is visible, the first ``capacity`` rows are kept)
+rather than corrupting the buffer.
+
+Implementation note: appends are a gather + one contiguous
+``dynamic_update_slice`` window per call, NOT a masked scatter — XLA CPU
+scatter walks indices serially (~100 ns/row) and made tracing ~5x; the
+windowed form measures ~1.3x (EXPERIMENTS.md §Perf).  The window needs
+``pad`` slots of headroom past the logical capacity (one full mask
+width), which is why the arrays are allocated at ``capacity + pad`` and
+the logical ``cap`` rides along as static pytree aux data.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import state as S
+
+# Transition kinds (the edges of the status lifecycle; see
+# docs/architecture.md for the full table).
+EV_START = 0          # IN_MQ -> RUNNING                     (phase 6)
+EV_COMPLETE = 1       # RUNNING -> COMPLETED                 (phase 1)
+EV_PREEMPT = 2        # RUNNING/IN_MQ -> PREEMPTED (kill)    (phase 2)
+EV_REQUEUE = 3        # RUNNING/IN_MQ -> IN_BATCH (repair)   (phase 2)
+EV_MISS_QUEUE = 4     # IN_BATCH/IN_MQ -> MISSED_QUEUE       (phase 4)
+EV_MISS_RUNNING = 5   # RUNNING -> MISSED_RUNNING            (phase 4)
+EV_CANCEL = 6         # NOT_ARRIVED/IN_BATCH -> CANCELLED    (phases 3, 5)
+
+EVENT_NAMES = {
+    EV_START: "start",
+    EV_COMPLETE: "complete",
+    EV_PREEMPT: "preempt",
+    EV_REQUEUE: "requeue",
+    EV_MISS_QUEUE: "miss_queue",
+    EV_MISS_RUNNING: "miss_running",
+    EV_CANCEL: "cancel",
+}
+
+# kinds that close an execution segment opened by EV_START
+SEGMENT_CLOSERS = (EV_COMPLETE, EV_PREEMPT, EV_REQUEUE, EV_MISS_RUNNING)
+
+
+@dataclasses.dataclass
+class TraceBuffer:
+    """Fixed-capacity event log + per-event fleet snapshots.
+
+    Row arrays are allocated at ``cap + pad`` where ``pad`` is the widest
+    mask ``record`` will see (max(N, M)); slots past ``cap`` are write
+    headroom for the append window, never read back.
+    """
+
+    # transition rows (allocated cap + pad; valid rows < min(n_rows, cap))
+    ev_time: jnp.ndarray     # f32 (C,)
+    ev_kind: jnp.ndarray     # i32 (C,)  EV_* code
+    ev_task: jnp.ndarray     # i32 (C,)  task id
+    ev_machine: jnp.ndarray  # i32 (C,)  machine id, -1 if not machine-bound
+    n_rows: jnp.ndarray      # i32 ()    rows written (> cap means overflow)
+    # per-event fleet snapshots (E = max_events)
+    snap_time: jnp.ndarray    # f32 (E,)    event timestamp
+    snap_batch: jnp.ndarray   # i32 (E,)    batch-queue depth after the event
+    snap_mq: jnp.ndarray      # i32 (E, M)  machine-queue depths
+    snap_running: jnp.ndarray  # i32 (E, M) running task ids (-1 idle)
+    snap_energy: jnp.ndarray  # f32 (E, M)  cumulative active energy (J)
+    cap: int = 0              # static logical row capacity (pytree aux)
+
+    @property
+    def capacity(self) -> int:
+        return self.cap
+
+    @property
+    def max_events(self) -> int:
+        return self.snap_time.shape[-1]
+
+
+_TB_LEAVES = ("ev_time", "ev_kind", "ev_task", "ev_machine", "n_rows",
+              "snap_time", "snap_batch", "snap_mq", "snap_running",
+              "snap_energy")
+jax.tree_util.register_pytree_node(
+    TraceBuffer,
+    lambda tb: (tuple(getattr(tb, f) for f in _TB_LEAVES), tb.cap),
+    lambda cap, leaves: TraceBuffer(*leaves, cap=cap),
+)
+
+
+def row_capacity_bound(n_tasks: int, lcap: int,
+                       n_machines: int = 0, n_intervals: int = 0) -> int:
+    """Static upper bound on transition rows for one replica.
+
+    Every task emits <= 1 terminal row and <= 1 start row, plus one
+    (start, requeue) pair per forced eviction; a down transition evicts
+    at most ``1 + lcap`` tasks and each of the ``n_intervals`` intervals
+    per machine has one down transition.
+    """
+    return 2 * n_tasks + 2 * (1 + lcap) * n_machines * n_intervals + 16
+
+
+def make_buffer(capacity: int, max_events: int, n_machines: int,
+                pad: int) -> TraceBuffer:
+    alloc = capacity + pad
+    return TraceBuffer(
+        ev_time=jnp.zeros((alloc,), jnp.float32),
+        ev_kind=jnp.full((alloc,), -1, jnp.int32),
+        ev_task=jnp.full((alloc,), -1, jnp.int32),
+        ev_machine=jnp.full((alloc,), -1, jnp.int32),
+        n_rows=jnp.int32(0),
+        snap_time=jnp.zeros((max_events,), jnp.float32),
+        snap_batch=jnp.zeros((max_events,), jnp.int32),
+        snap_mq=jnp.zeros((max_events, n_machines), jnp.int32),
+        snap_running=jnp.full((max_events, n_machines), -1, jnp.int32),
+        snap_energy=jnp.zeros((max_events, n_machines), jnp.float32),
+        cap=capacity,
+    )
+
+
+def record(tb: TraceBuffer, time: jnp.ndarray, kind, task: jnp.ndarray,
+           machine, mask: jnp.ndarray) -> TraceBuffer:
+    """Append one row per set bit of ``mask`` (in index order).
+
+    ``kind`` / ``machine`` may be scalars or arrays aligned with ``mask``;
+    ``task`` is an array aligned with ``mask``.  Rows land at the write
+    cursor in mask-index order — the engine's phases call this so that
+    the global row order matches the reference engine's emission order.
+
+    Writes one ``mask``-wide contiguous window at the cursor: set bits
+    are compacted to the window head by gathering with the rank given by
+    ``searchsorted(cumsum(mask))``; slots past the ``k`` valid rows hold
+    garbage until the next append (or stay past ``n_rows``, unread).
+    Once the cursor passes ``cap`` the window clamps into the pad
+    headroom, so overflow never rewrites a kept row.
+    """
+    alloc = tb.ev_time.shape[-1]
+    w = mask.shape[-1]
+    if alloc - tb.cap < w:
+        raise ValueError(
+            f"trace buffer pad {alloc - tb.cap} < mask width {w}; "
+            "allocate with make_buffer(..., pad=max(n_tasks, n_machines))")
+    mask = mask.astype(jnp.int32)
+    csum = jnp.cumsum(mask)
+    k = csum[-1]
+    # src[o] = index of the (o+1)-th set bit (garbage for o >= k)
+    src = jnp.clip(jnp.searchsorted(csum, jnp.arange(1, w + 1)), 0, w - 1)
+    start = jnp.minimum(tb.n_rows, alloc - w)
+    kind = jnp.broadcast_to(jnp.asarray(kind, jnp.int32), (w,))
+    machine = jnp.broadcast_to(jnp.asarray(machine, jnp.int32), (w,))
+    time_w = jnp.broadcast_to(jnp.asarray(time, jnp.float32), (w,))
+    dus = jax.lax.dynamic_update_slice
+    return dataclasses.replace(
+        tb,
+        ev_time=dus(tb.ev_time, time_w, (start,)),
+        ev_kind=dus(tb.ev_kind, kind[src], (start,)),
+        ev_task=dus(tb.ev_task, task.astype(jnp.int32)[src], (start,)),
+        ev_machine=dus(tb.ev_machine, machine[src], (start,)),
+        n_rows=tb.n_rows + k,
+    )
+
+
+def snapshot(tb: TraceBuffer, st: "S.SimState") -> TraceBuffer:
+    """Write the fleet snapshot for the event being processed.
+
+    Called once per loop iteration with the *post-phase* state; the row
+    index is ``st.n_events`` (pre-increment), which the loop guard keeps
+    below ``max_events``.
+    """
+    i = st.n_events
+    batch = jnp.sum(st.tasks.status == S.IN_BATCH, dtype=jnp.int32)
+    return dataclasses.replace(
+        tb,
+        snap_time=tb.snap_time.at[i].set(st.time, mode="drop"),
+        snap_batch=tb.snap_batch.at[i].set(batch, mode="drop"),
+        snap_mq=tb.snap_mq.at[i].set(st.mq_count, mode="drop"),
+        snap_running=tb.snap_running.at[i].set(st.machines.running,
+                                               mode="drop"),
+        snap_energy=tb.snap_energy.at[i].set(st.machines.energy,
+                                             mode="drop"),
+    )
+
+
+# --------------------------------------------------------------------------
+# Host-side accessors (numpy; also accept one replica of a vmapped trace)
+# --------------------------------------------------------------------------
+def resolve(trace_or_state) -> tuple[TraceBuffer, int | None]:
+    """Accept a SimState (``.trace``) or a TraceBuffer; returns
+    ``(buffer, n_events-or-None)`` or raises a pointed error when
+    tracing was off."""
+    tb = getattr(trace_or_state, "trace", None)
+    if tb is None and isinstance(trace_or_state, TraceBuffer):
+        tb = trace_or_state
+    if not isinstance(tb, TraceBuffer):
+        raise ValueError(
+            "no trace attached — run simulate(..., trace=True) / "
+            "SimParams(trace=True) first (docs/visualization.md)")
+    n_events = getattr(trace_or_state, "n_events", None)
+    return tb, (int(n_events) if n_events is not None else None)
+
+
+def events(tb: TraceBuffer) -> dict[str, np.ndarray]:
+    """Valid transition rows as numpy arrays, in emission order."""
+    n = min(int(tb.n_rows), tb.cap)
+    return {
+        "time": np.asarray(tb.ev_time)[:n],
+        "kind": np.asarray(tb.ev_kind)[:n],
+        "task": np.asarray(tb.ev_task)[:n],
+        "machine": np.asarray(tb.ev_machine)[:n],
+    }
+
+
+def snapshots(tb: TraceBuffer, n_events: int | None = None
+              ) -> dict[str, np.ndarray]:
+    """Valid fleet snapshots as numpy arrays (one row per event).
+
+    ``n_events`` trims to the processed-event count (pass
+    ``state.n_events``); defaults to trimming trailing all-zero rows via
+    the first untouched snapshot slot.
+    """
+    t = np.asarray(tb.snap_time)
+    if n_events is None:
+        # untouched slots keep time == 0; the first event is at t >= 0,
+        # so count rows until times stop being written (monotone stream)
+        written = np.nonzero(t > 0)[0]
+        n_events = int(written[-1]) + 1 if written.size else 1
+    n = min(int(n_events), t.shape[-1])
+    return {
+        "time": t[:n],
+        "batch": np.asarray(tb.snap_batch)[:n],
+        "mq": np.asarray(tb.snap_mq)[:n],
+        "running": np.asarray(tb.snap_running)[:n],
+        "energy": np.asarray(tb.snap_energy)[:n],
+    }
+
+
+def overflowed(tb: TraceBuffer) -> bool:
+    return int(tb.n_rows) > tb.cap
+
+
+def segments(tb: TraceBuffer) -> list[dict]:
+    """Reconstruct per-task execution segments from the event stream.
+
+    Each ``EV_START`` opens a segment on a machine; the task's next
+    closing transition (complete / preempt / requeue / miss-running)
+    closes it.  A preempted-and-requeued task therefore yields multiple
+    segments — the "preemption split" the Gantt chart draws.  Returns
+    dicts ``{task, machine, t0, t1, outcome}`` in close order; a segment
+    still open at the end of the trace (engine hit ``max_events``) is
+    closed with ``outcome=None`` at the last event time.
+    """
+    ev = events(tb)
+    open_seg: dict[int, tuple[int, float]] = {}
+    out: list[dict] = []
+    for time, kind, task, machine in zip(ev["time"], ev["kind"],
+                                         ev["task"], ev["machine"]):
+        task = int(task)
+        kind = int(kind)
+        if kind == EV_START:
+            open_seg[task] = (int(machine), float(time))
+        elif kind in SEGMENT_CLOSERS and task in open_seg:
+            m, t0 = open_seg.pop(task)
+            out.append({"task": task, "machine": m, "t0": t0,
+                        "t1": float(time), "outcome": kind})
+    last_t = float(ev["time"][-1]) if ev["time"].size else 0.0
+    for task, (m, t0) in sorted(open_seg.items()):
+        out.append({"task": task, "machine": m, "t0": t0, "t1": last_t,
+                    "outcome": None})
+    return out

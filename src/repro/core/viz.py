@@ -1,0 +1,418 @@
+"""Headless visual reporting from simulation traces (paper feature (iv)).
+
+The E2C GUI's value is *seeing* a schedule: the Gantt panel, the queue
+views, the energy gauge.  This module reconstructs those views from a
+``trace.TraceBuffer`` (``simulate(..., trace=True)``) and renders them as
+standalone SVG / HTML **with numpy only** — no display server, no
+matplotlib requirement — so the same charts work in CI, over SSH, and
+from a vmapped sweep on a TPU pod.
+
+Charts (each returns an SVG string; ``save`` writes it):
+
+* ``gantt``        per-machine execution segments, colored by outcome;
+                   a preempted-and-requeued task shows as a split bar,
+                   down intervals as shaded spans.
+* ``utilization``  fleet busy-fraction over time (step curve).
+* ``queue_depth``  batch-queue depth + total machine-queue depth.
+* ``energy_over_time``  cumulative active energy.
+* ``html_report``  all four in one standalone HTML page.
+* ``sweep_utilization``  mean busy-fraction across the replicas of a
+                   vmapped traced sweep (faint per-replica curves).
+
+Outcome colors use a status palette (completed=green, requeued=amber,
+killed=orange-red, missed=red); every chart carries a text legend so
+color never carries meaning alone.  See docs/visualization.md.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core import trace as T
+
+# --- chart chrome (light-surface palette; validated, see
+# docs/visualization.md for provenance) -----------------------------------
+SURFACE = "#fcfcfb"
+INK = "#0b0b0b"
+INK_2 = "#52514e"
+MUTED = "#898781"
+GRID = "#e1e0d9"
+AXIS = "#c3c2b7"
+SERIES_1 = "#2a78d6"   # blue
+SERIES_2 = "#eb6834"   # orange
+DOWN_FILL = "#e1e0d9"  # machine-down shading
+
+OUTCOME_COLORS = {
+    T.EV_COMPLETE: "#0ca30c",      # good
+    T.EV_REQUEUE: "#fab219",       # warning: evicted, ran again later
+    T.EV_PREEMPT: "#ec835a",       # serious: killed by spot reclaim
+    T.EV_MISS_RUNNING: "#d03b3b",  # critical: deadline hit mid-run
+    None: "#898781",               # still open when the trace ended
+}
+OUTCOME_LABELS = {
+    T.EV_COMPLETE: "completed",
+    T.EV_REQUEUE: "requeued",
+    T.EV_PREEMPT: "killed",
+    T.EV_MISS_RUNNING: "missed",
+    None: "open",
+}
+
+FONT = ('font-family="system-ui, -apple-system, \'Segoe UI\', sans-serif"')
+
+
+_resolve = T.resolve        # SimState-or-TraceBuffer -> (buffer, n_events)
+
+
+def _esc(s: str) -> str:
+    return (str(s).replace("&", "&amp;").replace("<", "&lt;")
+            .replace(">", "&gt;"))
+
+
+def _ticks(lo: float, hi: float, n: int = 6) -> np.ndarray:
+    if hi <= lo:
+        hi = lo + 1.0
+    raw = (hi - lo) / max(n, 1)
+    mag = 10.0 ** np.floor(np.log10(raw))
+    step = min((m for m in (1, 2, 2.5, 5, 10)
+                if m * mag >= raw), default=10) * mag
+    t0 = np.ceil(lo / step) * step
+    return np.arange(t0, hi + step * 1e-9, step)
+
+
+def _fmt(v: float) -> str:
+    return f"{v:g}" if abs(v) < 1e4 else f"{v:.2e}"
+
+
+class _Frame:
+    """Minimal SVG line-chart scaffold: surface, grid, axes, labels."""
+
+    def __init__(self, width: int, height: int, x_range, y_range,
+                 title: str, xlabel: str = "time (s)", ylabel: str = "",
+                 pad_l: int = 52, pad_r: int = 16, pad_t: int = 34,
+                 pad_b: int = 36, y_axis: bool = True):
+        self.w, self.h = width, height
+        self.x0, self.x1 = float(x_range[0]), float(max(*x_range, x_range[0] + 1e-9))
+        self.y0, self.y1 = float(y_range[0]), float(y_range[1])
+        if self.y1 <= self.y0:
+            self.y1 = self.y0 + 1.0
+        self.pl, self.pr, self.pt, self.pb = pad_l, pad_r, pad_t, pad_b
+        self.parts: list[str] = [
+            f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+            f'height="{height}" viewBox="0 0 {width} {height}" '
+            f'role="img" aria-label="{_esc(title)}">',
+            f'<rect width="{width}" height="{height}" fill="{SURFACE}"/>',
+            f'<text x="{pad_l}" y="20" {FONT} font-size="13" '
+            f'font-weight="600" fill="{INK}">{_esc(title)}</text>',
+        ]
+        self._axes(xlabel, ylabel, y_axis)
+
+    def sx(self, x) -> np.ndarray:
+        x = np.asarray(x, float)
+        return self.pl + (x - self.x0) / (self.x1 - self.x0) \
+            * (self.w - self.pl - self.pr)
+
+    def sy(self, y) -> np.ndarray:
+        y = np.asarray(y, float)
+        return self.h - self.pb - (y - self.y0) / (self.y1 - self.y0) \
+            * (self.h - self.pt - self.pb)
+
+    def _axes(self, xlabel: str, ylabel: str, y_axis: bool = True):
+        bot, left = self.h - self.pb, self.pl
+        for tx in _ticks(self.x0, self.x1):
+            px = float(self.sx(tx))
+            self.parts.append(
+                f'<line x1="{px:.1f}" y1="{self.pt}" x2="{px:.1f}" '
+                f'y2="{bot}" stroke="{GRID}" stroke-width="1"/>')
+            self.parts.append(
+                f'<text x="{px:.1f}" y="{bot + 14}" {FONT} font-size="10" '
+                f'fill="{MUTED}" text-anchor="middle">{_fmt(tx)}</text>')
+        for ty in (_ticks(self.y0, self.y1, 4) if y_axis else ()):
+            py = float(self.sy(ty))
+            self.parts.append(
+                f'<line x1="{left}" y1="{py:.1f}" x2="{self.w - self.pr}" '
+                f'y2="{py:.1f}" stroke="{GRID}" stroke-width="1"/>')
+            self.parts.append(
+                f'<text x="{left - 6}" y="{py + 3:.1f}" {FONT} '
+                f'font-size="10" fill="{MUTED}" '
+                f'text-anchor="end">{_fmt(ty)}</text>')
+        self.parts.append(
+            f'<line x1="{left}" y1="{bot}" x2="{self.w - self.pr}" '
+            f'y2="{bot}" stroke="{AXIS}" stroke-width="1"/>')
+        if xlabel:
+            self.parts.append(
+                f'<text x="{(left + self.w - self.pr) / 2:.0f}" '
+                f'y="{self.h - 8}" {FONT} font-size="10" fill="{INK_2}" '
+                f'text-anchor="middle">{_esc(xlabel)}</text>')
+        if ylabel:
+            self.parts.append(
+                f'<text x="14" y="{(self.pt + bot) / 2:.0f}" {FONT} '
+                f'font-size="10" fill="{INK_2}" text-anchor="middle" '
+                f'transform="rotate(-90 14 {(self.pt + bot) / 2:.0f})">'
+                f'{_esc(ylabel)}</text>')
+
+    def step_path(self, x: np.ndarray, y: np.ndarray, color: str,
+                  width: float = 2.0, opacity: float = 1.0,
+                  fill: str | None = None):
+        """Piecewise-constant curve: hold y[i] until x[i+1]."""
+        if x.size == 0:
+            return
+        px, py = self.sx(x), self.sy(y)
+        d = [f"M{px[0]:.1f},{py[0]:.1f}"]
+        for i in range(1, x.size):
+            d.append(f"H{px[i]:.1f}")
+            d.append(f"V{py[i]:.1f}")
+        d.append(f"H{self.sx(self.x1):.1f}")
+        path = " ".join(d)
+        if fill:
+            base = self.sy(self.y0)
+            self.parts.append(
+                f'<path d="{path} V{base:.1f} H{px[0]:.1f} Z" '
+                f'fill="{fill}" fill-opacity="0.12" stroke="none"/>')
+        self.parts.append(
+            f'<path d="{path}" fill="none" stroke="{color}" '
+            f'stroke-width="{width}" stroke-opacity="{opacity}" '
+            f'stroke-linejoin="round"/>')
+
+    def legend(self, entries: Sequence[tuple[str, str]]):
+        """Swatch + text label pairs, top-right."""
+        x = self.w - self.pr
+        for label, color in reversed(list(entries)):
+            est = 10 + 6.2 * len(label)
+            x -= est + 14
+            self.parts.append(
+                f'<rect x="{x:.0f}" y="12" width="10" height="10" rx="2" '
+                f'fill="{color}"/>')
+            self.parts.append(
+                f'<text x="{x + 14:.0f}" y="21" {FONT} font-size="10" '
+                f'fill="{INK_2}">{_esc(label)}</text>')
+
+    def render(self) -> str:
+        return "\n".join(self.parts) + "\n</svg>"
+
+
+def _span(tb: T.TraceBuffer, n_events: int | None) -> float:
+    snaps = T.snapshots(tb, n_events)
+    ev = T.events(tb)
+    hi = 0.0
+    if snaps["time"].size:
+        hi = max(hi, float(snaps["time"][-1]))
+    if ev["time"].size:
+        hi = max(hi, float(ev["time"][-1]))
+    return hi
+
+
+# --------------------------------------------------------------------------
+# Gantt
+# --------------------------------------------------------------------------
+def gantt(trace_or_state, dynamics=None, width: int = 960,
+          row_h: int = 22, title: str = "Schedule (Gantt)") -> str:
+    """Per-machine execution timeline, one bar per execution segment.
+
+    Segment color encodes the outcome (see legend); a task evicted by a
+    failure and restarted elsewhere appears as a split bar — the amber
+    "requeued" slice is the work that was lost.  Pass the scenario
+    ``dynamics`` (``state.MachineDynamics`` or ``workload.Scenario``) to
+    shade each machine's down intervals.
+    """
+    tb, n_events = _resolve(trace_or_state)
+    segs = T.segments(tb)
+    n_m = tb.snap_mq.shape[-1]
+    span = max(_span(tb, n_events), 1e-9)
+    pad_l, pad_r, pad_t, pad_b = 52, 16, 40, 36
+    height = pad_t + pad_b + row_h * n_m
+    # machine lanes replace the y axis (y_axis=False: no y grid/ticks)
+    fr = _Frame(width, height, (0.0, span), (0.0, 1.0), title,
+                xlabel="time (s)", pad_l=pad_l, pad_r=pad_r, pad_t=pad_t,
+                pad_b=pad_b, y_axis=False)
+
+    def lane_y(m: int) -> float:
+        return pad_t + m * row_h
+
+    for m in range(n_m):
+        fr.parts.append(f'<text x="{pad_l - 6}" y="{lane_y(m) + row_h / 2 + 3:.0f}" '
+                        f'{FONT} font-size="10" fill="{MUTED}" '
+                        f'text-anchor="end">m{m:02d}</text>')
+
+    # down-interval shading (behind segments)
+    dyn = getattr(dynamics, "dynamics", None)
+    dyn = dyn() if callable(dyn) else dynamics
+    if dyn is not None:
+        ds = np.asarray(dyn.down_start, float)
+        de = np.asarray(dyn.down_end, float)
+        for m in range(min(n_m, ds.shape[0])):
+            for k in range(ds.shape[1]):
+                a, b = ds[m, k], min(de[m, k], span)
+                if not np.isfinite(a) or b <= a:
+                    continue
+                x0, x1 = float(fr.sx(a)), float(fr.sx(min(b, span)))
+                fr.parts.append(
+                    f'<rect x="{x0:.1f}" y="{lane_y(m) + 1:.1f}" '
+                    f'width="{max(x1 - x0, 1):.1f}" height="{row_h - 2}" '
+                    f'fill="{DOWN_FILL}" fill-opacity="0.8">'
+                    f'<title>m{m} down {a:.2f}-{b:.2f}s</title></rect>')
+
+    bar_h = row_h - 8
+    for s in segs:
+        x0, x1 = float(fr.sx(s["t0"])), float(fr.sx(s["t1"]))
+        color = OUTCOME_COLORS[s["outcome"]]
+        label = OUTCOME_LABELS[s["outcome"]]
+        y = lane_y(s["machine"]) + (row_h - bar_h) / 2
+        fr.parts.append(
+            f'<rect x="{x0:.1f}" y="{y:.1f}" '
+            f'width="{max(x1 - x0 - 0.5, 1.0):.1f}" height="{bar_h}" '
+            f'rx="2" fill="{color}">'
+            f'<title>task {s["task"]} on m{s["machine"]}: '
+            f'{s["t0"]:.2f}-{s["t1"]:.2f}s ({label})</title></rect>')
+
+    entries = [(OUTCOME_LABELS[k], OUTCOME_COLORS[k])
+               for k in (T.EV_COMPLETE, T.EV_REQUEUE, T.EV_PREEMPT,
+                         T.EV_MISS_RUNNING)]
+    if dyn is not None:
+        entries.append(("down", DOWN_FILL))
+    fr.legend(entries)
+    return fr.render()
+
+
+# --------------------------------------------------------------------------
+# Step-curve charts from the per-event snapshots
+# --------------------------------------------------------------------------
+def busy_fraction(trace_or_state) -> tuple[np.ndarray, np.ndarray]:
+    """(times, fraction-of-machines-busy) step samples, one per event."""
+    tb, n_events = _resolve(trace_or_state)
+    snaps = T.snapshots(tb, n_events)
+    n_m = max(tb.snap_mq.shape[-1], 1)
+    busy = (snaps["running"] >= 0).sum(axis=-1) / n_m
+    return snaps["time"], busy
+
+
+def utilization(trace_or_state, width: int = 960, height: int = 220,
+                title: str = "Fleet utilization") -> str:
+    """Fraction of machines executing work, after each event."""
+    t, busy = busy_fraction(trace_or_state)
+    tb, n_events = _resolve(trace_or_state)
+    fr = _Frame(width, height, (0.0, max(_span(tb, n_events), 1e-9)),
+                (0.0, 1.0), title, ylabel="busy fraction")
+    fr.step_path(t, busy, SERIES_1, fill=SERIES_1)
+    return fr.render()
+
+
+def queue_depth(trace_or_state, width: int = 960, height: int = 220,
+                title: str = "Queue dynamics") -> str:
+    """Batch-queue depth and total machine-queue depth over time."""
+    tb, n_events = _resolve(trace_or_state)
+    snaps = T.snapshots(tb, n_events)
+    t = snaps["time"]
+    batch = snaps["batch"].astype(float)
+    mq = snaps["mq"].sum(axis=-1).astype(float)
+    top = max(float(batch.max(initial=0.0)), float(mq.max(initial=0.0)), 1.0)
+    fr = _Frame(width, height, (0.0, max(_span(tb, n_events), 1e-9)),
+                (0.0, top * 1.1), title, ylabel="tasks waiting")
+    fr.step_path(t, batch, SERIES_1)
+    fr.step_path(t, mq, SERIES_2)
+    fr.legend([("batch queue", SERIES_1), ("machine queues", SERIES_2)])
+    return fr.render()
+
+
+def energy_over_time(trace_or_state, width: int = 960, height: int = 220,
+                     title: str = "Cumulative active energy") -> str:
+    """Total active energy accrued by the fleet, after each event."""
+    tb, n_events = _resolve(trace_or_state)
+    snaps = T.snapshots(tb, n_events)
+    t = snaps["time"]
+    e = snaps["energy"].sum(axis=-1)
+    top = max(float(e.max(initial=0.0)), 1e-9)
+    fr = _Frame(width, height, (0.0, max(_span(tb, n_events), 1e-9)),
+                (0.0, top * 1.1), title, ylabel="energy (J)")
+    fr.step_path(t, e, SERIES_1, fill=SERIES_1)
+    return fr.render()
+
+
+# --------------------------------------------------------------------------
+# Sweep aggregation (vmapped traced replicas)
+# --------------------------------------------------------------------------
+def replica_trace(stacked: Any, i: int) -> T.TraceBuffer:
+    """Extract replica ``i`` from a trace (or state) with a leading
+    replica axis (``launch/sim.py`` traced sweeps)."""
+    import jax
+    tb = getattr(stacked, "trace", None)
+    tb = tb if tb is not None else stacked
+    return jax.tree.map(lambda x: np.asarray(x)[i], tb)
+
+
+def sweep_busy_curves(traces, n_points: int = 128
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """(grid, curves[R, n_points]) busy fractions on a common time grid.
+
+    ``traces`` is a stacked TraceBuffer (leading replica axis) or a list
+    of per-replica TraceBuffers.
+    """
+    if isinstance(traces, T.TraceBuffer):
+        n_rows = np.asarray(traces.n_rows)
+        # leading axis => stacked sweep output; unstack every replica
+        # (ndim == 0 means a single replica's buffers were passed)
+        traces = [replica_trace(traces, i) for i in range(n_rows.shape[0])] \
+            if n_rows.ndim else [traces]
+    curves_t, curves_v, hi = [], [], 0.0
+    for tb in traces:
+        t, busy = busy_fraction(tb)
+        curves_t.append(t)
+        curves_v.append(busy)
+        hi = max(hi, float(t[-1]) if t.size else 0.0)
+    grid = np.linspace(0.0, max(hi, 1e-9), n_points)
+    out = np.zeros((len(curves_t), n_points))
+    for i, (t, v) in enumerate(zip(curves_t, curves_v)):
+        if t.size == 0:
+            continue
+        idx = np.clip(np.searchsorted(t, grid, side="right") - 1, 0,
+                      t.size - 1)
+        out[i] = np.where(grid >= t[0], v[idx], 0.0)
+    return grid, out
+
+
+def sweep_utilization(traces, width: int = 960, height: int = 240,
+                      n_points: int = 128,
+                      title: str = "Mean fleet utilization across replicas"
+                      ) -> str:
+    """Aggregate utilization chart: faint per-replica step curves under
+    the across-replica mean."""
+    grid, curves = sweep_busy_curves(traces, n_points)
+    fr = _Frame(width, height, (0.0, float(grid[-1])), (0.0, 1.0), title,
+                ylabel="busy fraction")
+    for row in curves[:64]:          # cap the spaghetti, keep the mean exact
+        fr.step_path(grid, row, MUTED, width=1.0, opacity=0.25)
+    fr.step_path(grid, curves.mean(axis=0), SERIES_1, width=2.5)
+    fr.legend([("replica", MUTED), ("mean", SERIES_1)])
+    return fr.render()
+
+
+# --------------------------------------------------------------------------
+# Output
+# --------------------------------------------------------------------------
+def html_report(trace_or_state, dynamics=None,
+                title: str = "E2C simulation report") -> str:
+    """One standalone HTML page with all four charts inline."""
+    charts = [
+        gantt(trace_or_state, dynamics=dynamics),
+        utilization(trace_or_state),
+        queue_depth(trace_or_state),
+        energy_over_time(trace_or_state),
+    ]
+    body = "\n".join(f'<figure style="margin:16px 0">{c}</figure>'
+                     for c in charts)
+    return (
+        "<!DOCTYPE html>\n<html><head><meta charset='utf-8'>"
+        f"<title>{_esc(title)}</title></head>\n"
+        f"<body style=\"background:{SURFACE};margin:24px;"
+        "font-family:system-ui,-apple-system,'Segoe UI',sans-serif\">"
+        f"<h1 style='font-size:16px;color:{INK}'>{_esc(title)}</h1>\n"
+        f"{body}\n</body></html>\n")
+
+
+def save(path: str, text: str) -> str:
+    """Write an SVG/HTML string; creates parent directories."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    return path

@@ -95,6 +95,45 @@ def build_scenario_sweep(n_tasks: int, n_machines: int,
     return jax.vmap(one)
 
 
+def build_traced_sweep(n_tasks: int, n_machines: int,
+                       params: E.SimParams = E.SimParams()):
+    """Like ``build_sim_sweep``/``build_scenario_sweep`` but each replica
+    also returns its ``TraceBuffer`` — metrics stay per-replica scalars,
+    traces carry the full timeline (docs/visualization.md shows how to
+    render one replica or aggregate utilization across all of them).
+    Pass a stacked ``dynamics`` as the optional fifth argument for
+    scenario replicas.
+
+    -> f(task_table[R], mtype[R,M], tables[R], policy[R][, dynamics[R]])
+       -> (metrics[R], trace[R])
+    """
+    params = params._replace(trace=True)
+
+    def one(tasks, mtype, tables, policy_id, dynamics=None):
+        st = E.run_sim(tasks, mtype, tables, policy_id, params, dynamics)
+        return summarize_replica(st, tables, dynamics), st.trace
+
+    return jax.vmap(one)
+
+
+def trace_replica(inputs: tuple, i: int,
+                  params: E.SimParams = E.SimParams(),
+                  trace: bool = True) -> S.SimState:
+    """Re-run replica ``i`` of a stacked sweep input with tracing on.
+
+    The cheap path for "dump one replica's timeline from a big sweep":
+    run the (traceless, fast) sweep, pick the replica you care about
+    from its metrics, then re-simulate just that one with ``trace=True``
+    and hand the returned state to ``core/viz.py``.  ``inputs`` is the
+    4-tuple from ``make_replicas`` or the 5-tuple (with dynamics) from
+    ``make_scenario_replicas``.
+    """
+    rep = jax.tree.map(lambda x: jnp.asarray(x)[i], tuple(inputs))
+    dyn = rep[4] if len(rep) > 4 else None
+    params = params._replace(trace=trace)
+    return E.run_sim(rep[0], rep[1], rep[2], rep[3], params, dyn)
+
+
 _GROUPED_CACHE: dict = {}
 
 

@@ -1,0 +1,220 @@
+"""Trace-capture correctness: the jitted engine's event stream is
+bit-identical to the reference engine's, and the visual layer's Gantt
+segments exactly tile each machine's measured active time.
+
+This is the visualization analogue of test_engine_vs_ref: if the trace
+is wrong, every chart built from it lies.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis optional (dev extra)
+
+from repro.core import engine as E
+from repro.core import ref_engine as R
+from repro.core import report
+from repro.core import schedulers as P
+from repro.core import state as S
+from repro.core import trace as T
+from repro.core import viz
+from repro.core.eet import synth_eet
+from repro.core.workload import make_scenario, poisson_workload
+
+POLICIES = list(P.SCHEDULERS)
+
+
+def make_instance(seed, n_tasks=24, n_machines=4, n_task_types=3,
+                  n_machine_types=2, rate=3.0, slack=4.0):
+    rng = np.random.default_rng(seed)
+    eet = synth_eet(n_task_types, n_machine_types, inconsistency=0.4,
+                    seed=seed)
+    power = np.stack([rng.uniform(10, 50, n_machine_types),
+                      rng.uniform(60, 200, n_machine_types)],
+                     axis=1).astype(np.float32)
+    wl = poisson_workload(n_tasks, rate=rate, n_task_types=n_task_types,
+                          mean_eet=eet.eet.mean(1), slack=slack,
+                          slack_jitter=0.6, seed=seed + 1)
+    mtype = rng.integers(0, n_machine_types, n_machines)
+    return eet, power, wl, mtype
+
+
+def jit_rows(stt) -> list[tuple]:
+    ev = T.events(stt.trace)
+    return list(zip(ev["time"].tolist(), ev["kind"].tolist(),
+                    ev["task"].tolist(), ev["machine"].tolist()))
+
+
+def assert_streams_match(stt, ref, context=""):
+    rows = jit_rows(stt)
+    assert ref.trace is not None
+    assert len(rows) == len(ref.trace), (
+        f"row count mismatch {context}: jit={len(rows)} "
+        f"ref={len(ref.trace)}")
+    for i, (a, b) in enumerate(zip(rows, ref.trace)):
+        assert a[1:] == b[1:], f"row {i} mismatch {context}: {a} vs {b}"
+        assert abs(a[0] - b[0]) < 1e-3, f"row {i} time {context}: {a} vs {b}"
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_trace_matches_ref_static(policy):
+    eet, power, wl, mtype = make_instance(42)
+    stt = E.simulate(wl, eet, power, mtype, policy=policy, trace=True)
+    ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
+                         power, mtype, policy=policy, trace=True)
+    assert_streams_match(stt, ref, f"policy={policy}")
+
+
+@pytest.mark.parametrize("policy", ["mct", "minmin", "ee_mct"])
+@pytest.mark.parametrize("spot", [False, True])
+def test_trace_matches_ref_dynamic(policy, spot):
+    """Failure/spot scenarios: preempt + requeue rows line up too."""
+    eet, power, wl, mtype = make_instance(7)
+    scen = make_scenario(wl, 4, fail_rate=0.12, mttr=3.0, spot=spot,
+                         seed=5)
+    stt = E.simulate(wl, eet, power, mtype, policy=policy,
+                     dynamics=scen.dynamics(), trace=True)
+    ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
+                         power, mtype, policy=policy, speed=scen.speed,
+                         power_scale=scen.power_scale,
+                         down_start=scen.down_start,
+                         down_end=scen.down_end, kill=scen.kill,
+                         trace=True)
+    assert_streams_match(stt, ref, f"policy={policy} spot={spot}")
+    kinds = [r[1] for r in jit_rows(stt)]
+    expected = T.EV_PREEMPT if spot else T.EV_REQUEUE
+    assert expected in kinds, "scenario produced no evictions to trace"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), policy=st.sampled_from(POLICIES),
+       fail_rate=st.sampled_from([0.0, 0.1]),
+       spot=st.booleans())
+def test_trace_matches_ref_property(seed, policy, fail_rate, spot):
+    eet, power, wl, mtype = make_instance(seed, n_tasks=16, n_machines=3)
+    scen = make_scenario(wl, 3, fail_rate=fail_rate, mttr=4.0, spot=spot,
+                         seed=seed + 13)
+    stt = E.simulate(wl, eet, power, mtype, policy=policy,
+                     dynamics=scen.dynamics(), trace=True)
+    ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
+                         power, mtype, policy=policy, speed=scen.speed,
+                         power_scale=scen.power_scale,
+                         down_start=scen.down_start,
+                         down_end=scen.down_end, kill=scen.kill,
+                         trace=True)
+    assert_streams_match(stt, ref, f"seed={seed} policy={policy}")
+
+
+@pytest.mark.parametrize("fail_rate", [0.0, 0.12])
+def test_gantt_segments_tile_active_time(fail_rate):
+    """Sum of reconstructed segment durations per machine == the
+    engine's accrued active_time (the Gantt chart is exact, including
+    preemption splits)."""
+    eet, power, wl, mtype = make_instance(11)
+    scen = make_scenario(wl, 4, fail_rate=fail_rate, mttr=3.0, seed=3)
+    stt = E.simulate(wl, eet, power, mtype, policy="mct",
+                     dynamics=scen.dynamics(), trace=True)
+    segs = T.segments(stt.trace)
+    n_m = len(np.asarray(mtype))
+    per_m = np.zeros(n_m)
+    for s in segs:
+        assert s["outcome"] is not None, "segment left open"
+        per_m[s["machine"]] += s["t1"] - s["t0"]
+    np.testing.assert_allclose(
+        per_m, np.asarray(stt.machines.active_time), rtol=1e-4, atol=1e-3)
+
+
+def test_trace_off_by_default_and_not_perturbing():
+    """SimParams(trace=False) is the default; turning tracing on must
+    not change any simulation output."""
+    eet, power, wl, mtype = make_instance(19)
+    plain = E.simulate(wl, eet, power, mtype, policy="minmin")
+    assert plain.trace is None
+    traced = E.simulate(wl, eet, power, mtype, policy="minmin",
+                        trace=True)
+    assert traced.trace is not None
+    for field in ("status", "machine", "t_start", "t_end"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(plain.tasks, field)),
+            np.asarray(getattr(traced.tasks, field)), err_msg=field)
+    np.testing.assert_array_equal(np.asarray(plain.machines.energy),
+                                  np.asarray(traced.machines.energy))
+
+
+def test_trace_capacity_overflow_is_visible_not_corrupting():
+    eet, power, wl, mtype = make_instance(23)
+    stt = E.simulate(wl, eet, power, mtype, policy="mct", trace=True,
+                     trace_capacity=4)
+    assert T.overflowed(stt.trace)
+    ev = T.events(stt.trace)
+    assert len(ev["time"]) == 4           # trimmed to capacity
+    assert (np.diff(ev["time"]) >= -1e-6).all()
+
+
+def test_snapshots_are_monotone_and_consistent():
+    eet, power, wl, mtype = make_instance(29)
+    stt = E.simulate(wl, eet, power, mtype, policy="fcfs", trace=True)
+    snaps = T.snapshots(stt.trace, int(stt.n_events))
+    assert snaps["time"].shape[0] == int(stt.n_events)
+    assert (np.diff(snaps["time"]) >= -1e-6).all()
+    assert (snaps["batch"] >= 0).all()
+    assert (snaps["mq"] >= 0).all()
+    # cumulative energy never decreases
+    tot = snaps["energy"].sum(axis=-1)
+    assert (np.diff(tot) >= -1e-4).all()
+    # final snapshot: nothing running, queues empty (sim ran to quiet)
+    assert (snaps["running"][-1] == -1).all()
+    assert snaps["batch"][-1] == 0 and snaps["mq"][-1].sum() == 0
+
+
+def test_gantt_svg_shows_preemption_split():
+    """Acceptance criterion: a dynamic scenario renders a Gantt whose
+    evicted task appears as multiple segments (the split)."""
+    eet, power, wl, mtype = make_instance(7)
+    scen = make_scenario(wl, 4, fail_rate=0.12, mttr=3.0, spot=False,
+                         seed=5)
+    stt = E.simulate(wl, eet, power, mtype, policy="mct",
+                     dynamics=scen.dynamics(), trace=True)
+    segs = T.segments(stt.trace)
+    by_task: dict[int, int] = {}
+    for s in segs:
+        by_task[s["task"]] = by_task.get(s["task"], 0) + 1
+    assert max(by_task.values()) >= 2, "no task ran in >1 segment"
+    svg = viz.gantt(stt, dynamics=scen)
+    assert svg.startswith("<svg") and svg.rstrip().endswith("</svg>")
+    assert "requeued" in svg            # legend labels present
+    assert svg.count("<rect") > len(segs)   # segments + downtime + surface
+
+
+def test_viz_charts_render():
+    eet, power, wl, mtype = make_instance(31)
+    stt = E.simulate(wl, eet, power, mtype, policy="mct", trace=True)
+    for fn in (viz.utilization, viz.queue_depth, viz.energy_over_time):
+        svg = fn(stt)
+        assert svg.startswith("<svg") and "</svg>" in svg
+        assert "NaN" not in svg
+    html = viz.html_report(stt)
+    assert html.startswith("<!DOCTYPE html") and html.count("<svg") == 4
+    rows = report.trace_table(stt)
+    assert rows and all(r["event"] in T.EVENT_NAMES.values() for r in rows)
+    t, busy = viz.busy_fraction(stt)
+    assert ((busy >= 0) & (busy <= 1)).all()
+
+
+def test_traced_sweep_matches_single_replica():
+    """vmapped traced sweep == per-replica traced runs (trace axis
+    stacks like any other state leaf)."""
+    import jax
+    from repro.launch import sim as L
+    inputs = L.make_replicas(3, 12, 2, seed=0)
+    sweep = jax.jit(L.build_traced_sweep(12, 2))
+    mets, traces = sweep(*inputs)
+    one = viz.replica_trace(traces, 1)
+    single = L.trace_replica(inputs, 1)
+    ev_sweep, ev_single = T.events(one), T.events(single.trace)
+    for k in ("kind", "task", "machine"):
+        np.testing.assert_array_equal(ev_sweep[k], ev_single[k])
+    np.testing.assert_allclose(ev_sweep["time"], ev_single["time"],
+                               rtol=1e-5, atol=1e-5)
+    svg = viz.sweep_utilization(traces)
+    assert svg.startswith("<svg")
