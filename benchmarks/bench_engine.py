@@ -14,6 +14,7 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import md_table, save_result
@@ -64,6 +65,30 @@ def time_traced_sweep(n_replicas: int) -> tuple[float, float]:
     jax.block_until_ready(traces.n_rows)
     dt = time.perf_counter() - t0
     return dt, dt / n_replicas
+
+
+def time_learned_dispatch(n_replicas: int) -> tuple[float, float]:
+    """Learned-policy dispatch overhead, decision-for-decision.
+
+    The MLP policy is run with the MCT-equivalent warm start
+    (``neural.mct_mlp_params``), so both groups take *identical*
+    scheduling decisions and event trajectories — the timing difference
+    is purely the per-drain-step feature build + forward pass.  Both use
+    the policy-grouped path so the heuristic baseline doesn't pay for
+    the learned branch (batched lax.switch computes every branch).
+    """
+    from repro.core import neural as NN
+    pp = NN.mct_mlp_params()
+    base = make_replicas(n_replicas, N_TASKS, N_MACHINES,
+                         policies=["mct"], seed=0)
+    learned = base[:3] + (jnp.full_like(base[3], P.POLICY_IDS["mlp"]),)
+    times = []
+    for inputs, kw in ((base, {}), (learned, {"policy_params": pp})):
+        run_grouped_sweep(inputs, **kw)              # compile + warm
+        t0 = time.perf_counter()
+        run_grouped_sweep(inputs, **kw)
+        times.append((time.perf_counter() - t0) / n_replicas)
+    return times[0], times[1]                        # (mct, mlp) s/replica
 
 
 def run(out_dir=None, smoke: bool = False) -> dict:
@@ -124,6 +149,18 @@ def run(out_dir=None, smoke: bool = False) -> dict:
                  "per_replica_ms": round(trace_per * 1e3, 3),
                  "replicas_per_s": round(scen_n / trace_total, 1)})
 
+    # learned-policy dispatch: MLP with the MCT warm start vs MCT itself
+    # (identical decisions; difference = feature build + forward pass)
+    mct_per, mlp_per = time_learned_dispatch(scen_n)
+    rows.append({"replicas": f"{scen_n} (mct, grouped)",
+                 "total_s": round(mct_per * scen_n, 4),
+                 "per_replica_ms": round(mct_per * 1e3, 3),
+                 "replicas_per_s": round(1 / mct_per, 1)})
+    rows.append({"replicas": f"{scen_n} (learned mlp, grouped)",
+                 "total_s": round(mlp_per * scen_n, 4),
+                 "per_replica_ms": round(mlp_per * 1e3, 3),
+                 "replicas_per_s": round(1 / mlp_per, 1)})
+
     checks = {
         "T1_jit_beats_python_ref": bool(per_replica_1 < ref_per_replica),
         "T2_vmap_amortizes": bool(per_replica_big
@@ -134,6 +171,7 @@ def run(out_dir=None, smoke: bool = False) -> dict:
             scen_per * 1e3 < 4 * static_same_n),
         "T5_trace_overhead_bounded": bool(
             trace_per * 1e3 < 3 * static_same_n),
+        "T6_learned_dispatch_overhead_bounded": bool(mlp_per < 3 * mct_per),
     }
     payload = {"rows": rows,
                "ref_per_replica_ms": round(ref_per_replica * 1e3, 2),

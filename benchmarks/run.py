@@ -2,7 +2,13 @@
 
 Runs one harness per paper table/claim (see DESIGN.md §9) plus the
 roofline readers over whatever dry-run records exist, and writes JSON
-artifacts to results/bench/.
+artifacts to results/bench/:
+
+* ``<module>.json``         — each harness's latest payload (overwritten),
+* ``run-<timestamp>.json``  — ONE machine-readable record per aggregate
+  run (all module payloads + check results + versions + wall time), so
+  the perf trajectory of the repo is tracked run-over-run; CI uploads
+  these as artifacts.
 
 ``--smoke`` runs a CI-sized subset (small replica counts, quick modules
 only) so the whole aggregate finishes in a couple of minutes on a CPU
@@ -11,18 +17,33 @@ runner.  Results are recorded in EXPERIMENTS.md.
 from __future__ import annotations
 
 import inspect
+import json
+import os
+import platform
 import sys
 import time
 
 
+def _versions() -> dict:
+    v = {"python": platform.python_version()}
+    for mod in ("jax", "jaxlib", "numpy"):
+        try:
+            v[mod] = __import__(mod).__version__
+        except Exception:  # noqa: BLE001
+            v[mod] = None
+    return v
+
+
 def main(argv=None):
     t0 = time.perf_counter()
+    stamp = time.strftime("%Y%m%dT%H%M%S")
     argv = list(argv or [])
     smoke = "--smoke" in argv
     if smoke:
         argv.remove("--smoke")
     from benchmarks import (bench_energy, bench_engine, bench_kernels,
                             bench_policies, eet_from_roofline, roofline)
+    from benchmarks.common import RESULTS_DIR
     mods = [("bench_policies", bench_policies),
             ("bench_energy", bench_energy),
             ("bench_engine", bench_engine),
@@ -38,6 +59,7 @@ def main(argv=None):
         mods = [(n, m) for n, m in mods if n in argv]
     failures = []
     all_checks: dict[str, bool] = {}
+    payloads: dict[str, dict] = {}
     for name, mod in mods:
         print(f"\n{'='*70}\n# {name}\n{'='*70}")
         try:
@@ -45,13 +67,30 @@ def main(argv=None):
             if smoke and "smoke" in inspect.signature(mod.run).parameters:
                 kwargs["smoke"] = True
             payload = mod.run(**kwargs)
+            payloads[name] = payload
             for k, v in (payload.get("checks") or {}).items():
                 all_checks[f"{name}.{k}"] = v
         except Exception as e:  # noqa: BLE001
             import traceback
             traceback.print_exc()
             failures.append((name, repr(e)))
-    print(f"\n{'='*70}\n# summary ({time.perf_counter()-t0:.1f}s)")
+    seconds = time.perf_counter() - t0
+    # one timestamped machine-readable record per aggregate run
+    record = {
+        "timestamp": stamp,
+        "smoke": smoke,
+        "modules_run": [n for n, _ in mods],
+        "seconds": round(seconds, 2),
+        "versions": _versions(),
+        "checks": all_checks,
+        "failures": [{"module": n, "error": e} for n, e in failures],
+        "payloads": payloads,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    run_path = os.path.join(RESULTS_DIR, f"run-{stamp}.json")
+    with open(run_path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    print(f"\n{'='*70}\n# summary ({seconds:.1f}s) -> {run_path}")
     for k, v in sorted(all_checks.items()):
         print(f"  {'PASS' if v else 'FAIL'}  {k}")
     if failures:

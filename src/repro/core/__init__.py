@@ -7,6 +7,7 @@ Public API:
     TraceBuffer / viz            in-jit trace capture + SVG/HTML charts
                                  (Gantt, utilization, queues, energy)
     SCHEDULERS / register_policy pluggable scheduling methods
+    PolicyParams / train           learned policies + in-sim ES training
     EETTable / load_eet_csv / synth_eet, workload generators
 """
 from repro.core.eet import (EETTable, default_power, eet_from_roofline,
@@ -15,6 +16,12 @@ from repro.core.eet import (EETTable, default_power, eet_from_roofline,
 from repro.core.energy import total_energy
 from repro.core.engine import (SimParams, make_tables, run_sim, run_sweep,
                                simulate)
+from repro.core.neural import (LEARNED_POLICIES, LinearParams, MLPParams,
+                               PolicyParams, default_params, ee_mlp_params,
+                               init_params, machine_features,
+                               mct_mlp_params)
+from repro.core.train_policy import (ESConfig, TrainResult,
+                                     miss_energy_score, train)
 from repro.core.report import (SimReport, ascii_gantt, format_report,
                                metrics, trace_table)
 from repro.core.schedulers import (BATCH_POLICIES, POLICY_IDS, POLICY_NAMES,
@@ -43,4 +50,9 @@ __all__ = [
     "onoff_workload",
     # trace capture + headless visualization
     "TraceBuffer", "EVENT_NAMES", "trace_table", "viz",
+    # learned scheduling (parameterized policies + in-sim ES training)
+    "LEARNED_POLICIES", "LinearParams", "MLPParams", "PolicyParams",
+    "default_params", "ee_mlp_params", "init_params", "machine_features",
+    "mct_mlp_params", "ESConfig", "TrainResult", "miss_energy_score",
+    "train",
 ]

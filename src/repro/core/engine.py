@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import neural as NN
 from repro.core import schedulers as P
 from repro.core import state as S
 from repro.core import trace as T
@@ -249,7 +250,8 @@ def _apply_decision(st: S.SimState, dec: P.Decision) -> S.SimState:
 
 def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
            params: SimParams, const: tuple | None = None,
-           up: jnp.ndarray | None = None) -> S.SimState:
+           up: jnp.ndarray | None = None,
+           pparams: NN.PolicyParams | None = None) -> S.SimState:
     """Invoke the scheduler until it returns a no-op.
 
     Each iteration maps or cancels exactly one batch-queue task, so the
@@ -275,7 +277,7 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
     def body(c):
         s, _, iters = c
         dec = P.dispatch(policy_id, s, tb, params.lcap,
-                         params.cancel_infeasible, const, up)
+                         params.cancel_infeasible, const, up, pparams)
         s = _apply_decision(s, dec)
         return s, dec.task >= 0, iters + 1
 
@@ -350,14 +352,21 @@ def _next_event_time(st: S.SimState,
 @partial(jax.jit, static_argnames=("params",))
 def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
             policy_id: jnp.ndarray, params: SimParams = SimParams(),
-            dynamics: S.MachineDynamics | None = None) -> S.SimState:
+            dynamics: S.MachineDynamics | None = None,
+            policy_params: NN.PolicyParams | None = None) -> S.SimState:
     """Run one simulation replica to completion; returns the final state.
 
     All array arguments may carry leading batch dims via ``vmap`` (see
     ``run_sweep``).  ``params`` is static.  ``dynamics`` (optional) adds
     machine availability traces + DVFS states; omitting it compiles the
-    static-fleet engine with zero scenario overhead.
+    static-fleet engine with zero scenario overhead.  ``policy_params``
+    (optional) carries learned-policy weights (``neural.PolicyParams``) —
+    when omitted the zero default is used, so heuristic runs need not
+    build one; vmapping this axis evaluates a *population* of policies
+    (core/train_policy.py).
     """
+    if policy_params is None:
+        policy_params = NN.default_params()
     st = S.init_state(tasks, mtype, dynamics)
     n = tasks.arrival.shape[0]
     n_m = mtype.shape[-1]
@@ -396,7 +405,7 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
             up = S.machine_up(dynamics, st.time)
         st = _arrivals(st, params.qcap)
         st = _deadline_drops(st, tables)
-        st = _drain(st, tables, policy_id, params, const, up)
+        st = _drain(st, tables, policy_id, params, const, up, policy_params)
         st = _start_tasks(st, tables, up)
         if params.trace:
             st = replace(st, trace=T.snapshot(st.trace, st))
@@ -423,7 +432,8 @@ def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
              noise: np.ndarray | None = None,
              dynamics: S.MachineDynamics | None = None,
              trace: bool = False,
-             trace_capacity: int | None = None) -> S.SimState:
+             trace_capacity: int | None = None,
+             policy_params: NN.PolicyParams | None = None) -> S.SimState:
     """Host-friendly wrapper: one replica, named policy.
 
     ``dynamics`` makes the fleet dynamic (failures / spot preemption /
@@ -431,7 +441,8 @@ def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
     ``state.static_dynamics``.  ``trace=True`` attaches a
     ``trace.TraceBuffer`` to the returned state (``.trace``) — the event
     stream + fleet snapshots behind ``core/viz.py`` (see
-    docs/visualization.md).
+    docs/visualization.md).  ``policy_params`` supplies learned-policy
+    weights for the ``mlp``/``linear`` policies (docs/learned_scheduling.md).
     """
     params = SimParams(lcap=lcap, qcap=qcap or (1 << 30),
                        cancel_infeasible=cancel_infeasible, trace=trace,
@@ -439,13 +450,14 @@ def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
     tables = make_tables(eet, power, workload.n_tasks, noise=noise)
     mtype = jnp.asarray(np.asarray(machine_types, np.int32))
     return run_sim(workload.to_task_table(), mtype, tables,
-                   P.POLICY_IDS[policy], params, dynamics)
+                   P.POLICY_IDS[policy], params, dynamics, policy_params)
 
 
 def run_sweep(tasks: S.TaskTable, mtype: jnp.ndarray,
               tables: S.StaticTables, policy_ids: jnp.ndarray,
               params: SimParams = SimParams(),
-              dynamics: S.MachineDynamics | None = None) -> S.SimState:
+              dynamics: S.MachineDynamics | None = None,
+              policy_params: NN.PolicyParams | None = None) -> S.SimState:
     """vmap over leading replica axes of any/all array arguments.
 
     Arguments that should be shared across replicas must be broadcast by the
@@ -453,13 +465,28 @@ def run_sweep(tasks: S.TaskTable, mtype: jnp.ndarray,
     ("pod", "data") mesh axes for pod-scale Monte-Carlo).  ``dynamics``,
     when given, carries a leading replica axis like everything else — a
     Monte-Carlo grid over failure rates / DVFS states is just another
-    stacked input.
+    stacked input.  So does ``policy_params``: stacking perturbed weight
+    pytrees along the replica axis evaluates a whole ES population in one
+    call (core/train_policy.py).
     """
-    if dynamics is None:
+    if dynamics is None and policy_params is None:
         def one(tasks, mtype, tables, pid):
             return run_sim(tasks, mtype, tables, pid, params)
         return jax.vmap(one)(tasks, mtype, tables, policy_ids)
 
-    def one_dyn(tasks, mtype, tables, pid, dyn):
-        return run_sim(tasks, mtype, tables, pid, params, dyn)
-    return jax.vmap(one_dyn)(tasks, mtype, tables, policy_ids, dynamics)
+    if dynamics is None:
+        def one_pp(tasks, mtype, tables, pid, pp):
+            return run_sim(tasks, mtype, tables, pid, params,
+                           policy_params=pp)
+        return jax.vmap(one_pp)(tasks, mtype, tables, policy_ids,
+                                policy_params)
+
+    if policy_params is None:
+        def one_dyn(tasks, mtype, tables, pid, dyn):
+            return run_sim(tasks, mtype, tables, pid, params, dyn)
+        return jax.vmap(one_dyn)(tasks, mtype, tables, policy_ids, dynamics)
+
+    def one_full(tasks, mtype, tables, pid, dyn, pp):
+        return run_sim(tasks, mtype, tables, pid, params, dyn, pp)
+    return jax.vmap(one_full)(tasks, mtype, tables, policy_ids, dynamics,
+                              policy_params)

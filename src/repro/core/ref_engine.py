@@ -15,6 +15,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import neural as NN
 from repro.core import state as S
 from repro.core import trace as TR
 
@@ -55,6 +56,9 @@ class _Sim:
     down_end: np.ndarray | None = None       # (M, K)
     kill: np.ndarray | None = None           # (M,) bool
     trace: list[tuple] | None = None         # enabled by simulate_ref
+    # learned-policy weights (numpy float32 dict from neural.params_to_numpy;
+    # None = the engine's zero default)
+    policy_params: dict | None = None
 
     status: np.ndarray = field(init=False)
     machine: np.ndarray = field(init=False)
@@ -81,6 +85,8 @@ class _Sim:
             self.down_end = np.full((m, 1), np.inf)
         if self.kill is None:
             self.kill = np.zeros(m, bool)
+        if self.policy_params is None:
+            self.policy_params = NN.params_to_numpy(None)
         self.n_preempts = np.zeros(n, np.int32)
         self.status = np.full(n, S.NOT_ARRIVED, np.int32)
         self.machine = np.full(n, -1, np.int32)
@@ -217,6 +223,24 @@ class _Sim:
                 self.running[m] = -1
 
     # ---- scheduler -------------------------------------------------------
+    def _learned_scores(self, t: int) -> np.ndarray:
+        """(M,) learned-policy scores for mapping task ``t`` to each
+        machine — the numpy mirror of ``neural.machine_features`` +
+        forward pass (float32, same op order as the jitted engine)."""
+        n_m = len(self.mtype)
+        eet_row = np.array([self.expected(t, m) for m in range(n_m)],
+                           np.float32)
+        en_row = np.array([self.expected(t, m) * self.p_active(m)
+                           for m in range(n_m)], np.float32)
+        avail = np.array([self.avail(m) for m in range(n_m)], np.float32)
+        mq = np.array([len(self.queue_of(m)) for m in range(n_m)],
+                      np.float32)
+        room = np.array([self.room(m) and self.up(m) for m in range(n_m)],
+                        bool)
+        feats = NN.machine_features_np(eet_row, en_row, avail, self.time,
+                                       self.deadline[t], mq, room)
+        return NN.score_machines_np(self.policy_params, feats, self.policy)
+
     def decide(self):
         """Returns (task, machine) or None; mirrors schedulers.py exactly."""
         q = self.batch_queue()
@@ -226,6 +250,10 @@ class _Sim:
             return None
         head = q[0]
         avail = {m: self.avail(m) for m in rooms}
+        if self.policy in ("mlp", "linear"):
+            scores = self._learned_scores(head)
+            m = min(rooms, key=lambda m: (scores[m], m))
+            return head, m
         if self.policy == "fcfs":
             m = min(rooms, key=lambda m: (avail[m], m))
             return head, m
@@ -362,17 +390,23 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                  cancel_infeasible=True, noise=None,
                  speed=None, power_scale=None, down_start=None,
                  down_end=None, kill=None,
-                 max_events=None, trace=False) -> RefResult:
+                 max_events=None, trace=False,
+                 policy_params=None) -> RefResult:
     """Oracle run.  The ``speed``/``power_scale``/``down_*``/``kill``
     kwargs mirror ``state.MachineDynamics`` (all default to the static
     fleet).  ``trace=True`` collects the ``(time, kind, task, machine)``
     event stream in the same order the jitted engine records it —
-    ``tests/test_trace.py`` asserts the two streams are identical."""
+    ``tests/test_trace.py`` asserts the two streams are identical.
+    ``policy_params`` takes a ``neural.PolicyParams`` pytree (or the dict
+    from ``neural.params_to_numpy``) for the learned ``mlp``/``linear``
+    policies; omitted = the engine's zero default."""
     arrival = np.asarray(arrival, np.float64)
     if noise is None:
         noise = np.ones(len(arrival))
     def _f64(x):
         return None if x is None else np.asarray(x, np.float64)
+    if policy_params is not None and not isinstance(policy_params, dict):
+        policy_params = NN.params_to_numpy(policy_params)
     sim = _Sim(arrival, np.asarray(type_id, np.int64),
                np.asarray(deadline, np.float64),
                np.asarray(eet, np.float64), np.asarray(power, np.float64),
@@ -381,5 +415,6 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                speed=_f64(speed), power_scale=_f64(power_scale),
                down_start=_f64(down_start), down_end=_f64(down_end),
                kill=None if kill is None else np.asarray(kill, bool),
-               trace=[] if trace else None)
+               trace=[] if trace else None,
+               policy_params=policy_params)
     return sim.run(max_events)

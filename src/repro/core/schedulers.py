@@ -1,9 +1,15 @@
 """Pluggable scheduling policies (the paper's feature (ii)).
 
-Every policy is a pure function ``(state, tables, lcap) -> Decision`` where
+Every policy is a pure function
+``(state, tables, view, rr_ptr, params) -> Decision`` where
 ``Decision = (task_id, machine_id)`` (int32; ``task_id == -1`` means "nothing
-to schedule").  The engine dispatches on an integer policy id with
-``lax.switch`` so a whole *sweep over policies* can be expressed with `vmap`.
+to schedule") and ``params`` is the shared learned-policy weight pytree
+(``neural.PolicyParams`` — heuristics ignore it; parameterized policies
+read their weights from it).  The engine dispatches on an integer policy
+id with ``lax.switch`` so a whole *sweep over policies* can be expressed
+with `vmap`, and because ``params`` is an ordinary traced operand a
+*population of policies* (ES training, core/train_policy.py) is just one
+more vmapped axis.
 
 Adding a new method = writing one function and registering it — exactly the
 paper's plug-in workflow, minus the GUI dialog.
@@ -121,11 +127,11 @@ def _head_decision(view: SchedView, scores_m: jnp.ndarray) -> Decision:
 # --------------------------------------------------------------------------
 # Immediate policies
 # --------------------------------------------------------------------------
-def fcfs(state, tables, view: SchedView, rr_ptr) -> Decision:
+def fcfs(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     return _head_decision(view, view.avail)
 
 
-def round_robin(state, tables, view: SchedView, rr_ptr) -> Decision:
+def round_robin(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     n_m = view.room.shape[0]
     # first machine with room at or after rr_ptr (cyclic)
     order = (jnp.arange(n_m) + rr_ptr) % n_m
@@ -137,23 +143,23 @@ def round_robin(state, tables, view: SchedView, rr_ptr) -> Decision:
                     jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
 
 
-def met(state, tables, view: SchedView, rr_ptr) -> Decision:
+def met(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     scores = jnp.where(view.head >= 0, view.eet_nm[view.head], BIG)
     return _head_decision(view, scores)
 
 
-def mct(state, tables, view: SchedView, rr_ptr) -> Decision:
+def mct(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     scores = jnp.where(view.head >= 0,
                        view.completion_row(view.head), BIG)
     return _head_decision(view, scores)
 
 
-def ee_met(state, tables, view: SchedView, rr_ptr) -> Decision:
+def ee_met(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     scores = jnp.where(view.head >= 0, view.energy_nm[view.head], BIG)
     return _head_decision(view, scores)
 
 
-def ee_mct(state, tables, view: SchedView, rr_ptr) -> Decision:
+def ee_mct(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     """Min energy among deadline-feasible machines, else min completion."""
     h = jnp.maximum(view.head, 0)
     dl = state.tasks.deadline[h]
@@ -175,7 +181,7 @@ def _pair_mask(view: SchedView) -> jnp.ndarray:
     return view.in_batch[:, None] & view.room[None, :]
 
 
-def minmin(state, tables, view: SchedView, rr_ptr) -> Decision:
+def minmin(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     mask = _pair_mask(view)
     c = jnp.where(mask, view.completion_full(), BIG)
     flat = jnp.argmin(c)
@@ -186,7 +192,7 @@ def minmin(state, tables, view: SchedView, rr_ptr) -> Decision:
                     jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
 
 
-def maxmin(state, tables, view: SchedView, rr_ptr) -> Decision:
+def maxmin(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     mask = _pair_mask(view)
     c = jnp.where(mask, view.completion_full(), BIG)
     best_c = jnp.min(c, axis=1)              # (N,) best completion per task
@@ -199,7 +205,7 @@ def maxmin(state, tables, view: SchedView, rr_ptr) -> Decision:
                     jnp.bool_(False))
 
 
-def edf_mct(state, tables, view: SchedView, rr_ptr) -> Decision:
+def edf_mct(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     dl = jnp.where(view.in_batch, state.tasks.deadline, BIG)
     t = jnp.argmin(dl).astype(jnp.int32)
     ok = view.in_batch.any() & view.any_room
@@ -241,15 +247,24 @@ def dispatch(policy_id: jnp.ndarray, state: S.SimState,
              tables: S.StaticTables, lcap: int,
              cancel_infeasible: bool | jnp.ndarray,
              const: tuple | None = None,
-             up: jnp.ndarray | None = None) -> Decision:
-    """Run the selected policy + the cancellation wrapper."""
+             up: jnp.ndarray | None = None,
+             params=None) -> Decision:
+    """Run the selected policy + the cancellation wrapper.
+
+    ``params`` is the learned-policy weight pytree shared by every
+    branch (``neural.PolicyParams``); the engine always materializes one
+    (default zeros) so the switch operands have a fixed structure.
+    """
+    if params is None:
+        from repro.core import neural as NN
+        params = NN.default_params()
     view = build_view(state, tables, lcap, const, up)
     branches = [
         (lambda fn: (lambda args: fn(*args)))(SCHEDULERS[n])
         for n in POLICY_NAMES
     ]
     dec = jax.lax.switch(policy_id, branches,
-                         (state, tables, view, state.rr_ptr))
+                         (state, tables, view, state.rr_ptr, params))
     # Cancellation wrapper: if even the best machine cannot meet the selected
     # task's deadline, cancel it (E2C's "canceled tasks" pool).
     t = jnp.maximum(dec.task, 0)

@@ -1,0 +1,239 @@
+"""In-simulator policy training: antithetic evolution strategies on
+vmapped scenario fleets.
+
+The sweep infrastructure is a massively parallel fitness evaluator: one
+jitted ``vmap`` runs R simulation replicas at once, so gradient-free
+training of a scheduling policy *inside* the simulator is just a sweep
+whose replica axis is (perturbation × scenario).  This module implements
+OpenAI-style antithetic ES (Salimans et al. 2017):
+
+  theta_{g+1} = theta_g - lr * 1/(2 P sigma) * sum_i (f(theta+sigma e_i)
+                - f(theta-sigma e_i)) e_i
+
+with ``f`` = mean *energy-weighted deadline-miss score* over a grid of
+training scenarios, ``e_i ~ N(0, I)``, and every ``f`` evaluation a
+replica of the jitted engine.  One generation — (2P+1) parameter vectors
+× S scenarios — compiles to a **single jitted call** (no per-perturbation
+dispatch from Python); ``tests/test_neural.py`` asserts the trace count.
+
+The trainer is elitist with a margin: the incumbent ``theta`` is
+evaluated alongside its perturbations each generation and the best-ever
+parameters (by train fitness) are returned, with challengers accepted
+only when they beat the best by ``elite_margin`` — so with the default
+``ee_mct``-equivalent warm start (``neural.ee_mlp_params``) the trained
+policy is never meaningfully worse than the best energy-aware heuristic
+*on the training grid*; the held-out evaluation lives in
+``launch/learn.py``.
+
+Only the selected family's weights (``params.mlp`` or ``params.linear``)
+are flattened into ``theta``; the other family rides along frozen so the
+``PolicyParams`` pytree structure the engine threads through
+``lax.switch`` never changes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import engine as E
+from repro.core import neural as NN
+from repro.core import schedulers as P
+
+
+@dataclass(frozen=True)
+class ESConfig:
+    """Hyperparameters of one ES run (small defaults: CI-friendly)."""
+    pop: int = 8               # antithetic pairs per generation (2*pop evals)
+    sigma: float = 0.05        # perturbation scale
+    lr: float = 0.05           # step size on theta
+    generations: int = 10
+    energy_weight: float = 0.2  # w in miss_frac + w * energy / e_scale
+    elite_margin: float = 0.005  # challenger must beat best-ever by this
+    #                              much train fitness (rejects noise-level
+    #                              "improvements" that don't generalize)
+    seed: int = 0
+
+
+@dataclass
+class TrainResult:
+    params: NN.PolicyParams          # best-ever parameters (train fitness)
+    fitness: float                   # their training fitness (lower=better)
+    history: list = field(default_factory=list)   # per-gen best/mean/theta_f
+    policy: str = "mlp"
+    theta: np.ndarray | None = None  # final (not necessarily best) theta
+
+
+# --------------------------------------------------------------------------
+# Objective
+# --------------------------------------------------------------------------
+def miss_energy_score(metrics: dict, e_scale,
+                      energy_weight: float = 0.2) -> jnp.ndarray:
+    """Energy-weighted deadline-miss score; lower is better.
+
+    ``1 - completion_rate`` counts every task that did not finish
+    (missed, cancelled, preempted) — the quantity E2C's deadline studies
+    minimize — and the energy term is normalized by ``e_scale`` (a
+    reference policy's mean energy on the same grid) so the two terms are
+    commensurate across EET scales.
+    """
+    miss = 1.0 - metrics["completion_rate"]
+    return miss + energy_weight * metrics["energy"] / e_scale
+
+
+def _fitness_fn(sim_params: E.SimParams, policy_id: int,
+                energy_weight: float):
+    """One (params, scenario) -> score evaluation, vmap-ready."""
+
+    def one(theta_params, tasks, mtype, tables, dyn, e_scale):
+        st = E.run_sim(tasks, mtype, tables, jnp.int32(policy_id),
+                       sim_params, dyn, theta_params)
+        from repro.launch.sim import summarize_replica
+        m = summarize_replica(st, tables, dyn)
+        return miss_energy_score(m, e_scale, energy_weight)
+
+    return one
+
+
+def make_fitness(train_inputs: tuple, sim_params: E.SimParams,
+                 policy: str = "mlp", energy_weight: float = 0.2,
+                 e_scale: float | None = None):
+    """-> ``fitness(params_pytree) -> ()`` mean score over the grid, and a
+    population version ``fitness_pop(stacked_params) -> (K,)``.
+
+    ``train_inputs`` is the 5-tuple from
+    ``launch.learn.make_grid`` / ``launch.sim.make_scenario_replicas``
+    (task_tables, mtypes, tables, policy_ids, dynamics) — the policy_ids
+    column is ignored (the trained policy id is fixed).  ``e_scale``
+    defaults to the grid-mean energy of MCT, computed once here, so the
+    energy term is measured relative to a fixed heuristic.
+    """
+    tt, mt, tb, _pids, dyn = train_inputs
+    pid = P.POLICY_IDS[policy]
+    if e_scale is None:
+        e_scale = float(np.mean(np.asarray(
+            heuristic_scores(train_inputs, ["mct"], sim_params,
+                             energy_weight=0.0, raw_energy=True)["mct"])))
+    one = _fitness_fn(sim_params, pid, energy_weight)
+    over_scen = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, None))
+
+    def fitness(params: NN.PolicyParams) -> jnp.ndarray:
+        return jnp.mean(over_scen(params, tt, mt, tb, dyn,
+                                  jnp.float32(e_scale)))
+
+    fitness_pop = jax.vmap(fitness)
+    return fitness, fitness_pop, e_scale
+
+
+def heuristic_scores(inputs: tuple, policies: list[str],
+                     sim_params: E.SimParams = E.SimParams(),
+                     energy_weight: float = 0.2,
+                     e_scale: float = 1.0,
+                     raw_energy: bool = False) -> dict:
+    """Per-policy per-scenario scores of heuristic baselines on a grid.
+
+    With ``raw_energy=True`` returns each replica's total energy instead
+    (used to calibrate ``e_scale``)."""
+    tt, mt, tb, _pids, dyn = inputs
+    from repro.launch.sim import jitted_scenario_sweep
+    n_tasks = int(tt.arrival.shape[-1])
+    n_machines = int(mt.shape[-1])
+    sweep = jitted_scenario_sweep(n_tasks, n_machines, sim_params)
+    out = {}
+    n_rep = int(tt.arrival.shape[0])
+    for pol in policies:
+        pids = jnp.full((n_rep,), P.POLICY_IDS[pol], jnp.int32)
+        m = sweep(tt, mt, tb, pids, dyn)
+        if raw_energy:
+            out[pol] = np.asarray(m["energy"])
+        else:
+            out[pol] = np.asarray(
+                miss_energy_score(m, jnp.float32(e_scale), energy_weight))
+    return out
+
+
+# --------------------------------------------------------------------------
+# The ES loop
+# --------------------------------------------------------------------------
+def make_es_step(fitness_pop, unravel, frozen: NN.PolicyParams,
+                 policy: str, cfg: ESConfig):
+    """Build the jitted one-generation update.
+
+    Returns ``step(theta, key) -> (theta', f_all, grad_norm, gen_best)``
+    where ``f_all`` is ``(2*pop+1,)`` — the incumbent's fitness first,
+    then the +sigma and -sigma perturbations — and ``gen_best`` is the
+    evaluated parameter vector with the lowest fitness (so the elitist
+    outer loop never has to re-derive a perturbation).  Everything
+    (perturb, 2P+1 × S simulations, gradient estimate, update) is inside
+    ONE ``jax.jit``.
+    """
+
+    def to_params(theta: jnp.ndarray) -> NN.PolicyParams:
+        return frozen._replace(**{policy: unravel(theta)})
+
+    @jax.jit
+    def step(theta, key):
+        eps = jax.random.normal(key, (cfg.pop, theta.shape[0]),
+                                theta.dtype)
+        thetas = jnp.concatenate([
+            theta[None, :],
+            theta[None, :] + cfg.sigma * eps,
+            theta[None, :] - cfg.sigma * eps,
+        ])                                           # (2P+1, D)
+        params_batch = jax.vmap(to_params)(thetas)
+        f_all = fitness_pop(params_batch)            # (2P+1,)
+        f_plus, f_minus = f_all[1:cfg.pop + 1], f_all[cfg.pop + 1:]
+        grad = jnp.mean((f_plus - f_minus)[:, None] * eps, axis=0) \
+            / (2.0 * cfg.sigma)
+        theta_new = theta - cfg.lr * grad
+        return (theta_new, f_all, jnp.linalg.norm(grad),
+                thetas[jnp.argmin(f_all)])
+
+    return step
+
+
+def train(train_inputs: tuple, policy: str = "mlp",
+          sim_params: E.SimParams = E.SimParams(),
+          cfg: ESConfig = ESConfig(),
+          init: NN.PolicyParams | None = None) -> TrainResult:
+    """Train one learned policy family with antithetic ES.
+
+    ``init`` defaults to the ``ee_mct``-equivalent warm start, so
+    generation 0's incumbent already matches the strongest energy-aware
+    heuristic and the returned parameters (margin-elitist best-ever by
+    train fitness) can only improve on it.
+    """
+    if policy not in NN.LEARNED_POLICIES:
+        raise ValueError(f"not a learned policy: {policy!r}")
+    init = init if init is not None else NN.ee_mlp_params()
+    theta0, unravel = ravel_pytree(getattr(init, policy))
+    fitness, fitness_pop, e_scale = make_fitness(
+        train_inputs, sim_params, policy, cfg.energy_weight)
+    step = make_es_step(fitness_pop, unravel, init, policy, cfg)
+
+    theta = theta0
+    best_theta, best_f = theta0, float("inf")
+    key = jax.random.PRNGKey(cfg.seed)
+    history = []
+    for g in range(cfg.generations):
+        key, sub = jax.random.split(key)
+        theta_new, f_all, gnorm, gen_best = step(theta, sub)
+        f_all = np.asarray(f_all)
+        # elitism over everything evaluated this generation; gen 0's
+        # incumbent (the warm start) seeds best_f without a margin
+        if best_f == float("inf"):
+            best_f, best_theta = float(f_all[0]), theta
+        if float(f_all.min()) < best_f - cfg.elite_margin:
+            best_f = float(f_all.min())
+            best_theta = gen_best
+        history.append({"gen": g, "theta_fitness": float(f_all[0]),
+                        "best": float(f_all.min()),
+                        "mean": float(f_all.mean()),
+                        "grad_norm": float(gnorm)})
+        theta = theta_new
+    best_params = init._replace(**{policy: unravel(jnp.asarray(best_theta))})
+    return TrainResult(params=best_params, fitness=best_f, history=history,
+                       policy=policy, theta=np.asarray(theta))

@@ -42,6 +42,7 @@ GRID = "#e1e0d9"
 AXIS = "#c3c2b7"
 SERIES_1 = "#2a78d6"   # blue
 SERIES_2 = "#eb6834"   # orange
+SERIES_3 = "#1d9a8f"   # teal
 DOWN_FILL = "#e1e0d9"  # machine-down shading
 
 OUTCOME_COLORS = {
@@ -91,7 +92,7 @@ class _Frame:
     def __init__(self, width: int, height: int, x_range, y_range,
                  title: str, xlabel: str = "time (s)", ylabel: str = "",
                  pad_l: int = 52, pad_r: int = 16, pad_t: int = 34,
-                 pad_b: int = 36, y_axis: bool = True):
+                 pad_b: int = 36, y_axis: bool = True, x_axis: bool = True):
         self.w, self.h = width, height
         self.x0, self.x1 = float(x_range[0]), float(max(*x_range, x_range[0] + 1e-9))
         self.y0, self.y1 = float(y_range[0]), float(y_range[1])
@@ -106,7 +107,7 @@ class _Frame:
             f'<text x="{pad_l}" y="20" {FONT} font-size="13" '
             f'font-weight="600" fill="{INK}">{_esc(title)}</text>',
         ]
-        self._axes(xlabel, ylabel, y_axis)
+        self._axes(xlabel, ylabel, y_axis, x_axis)
 
     def sx(self, x) -> np.ndarray:
         x = np.asarray(x, float)
@@ -118,9 +119,10 @@ class _Frame:
         return self.h - self.pb - (y - self.y0) / (self.y1 - self.y0) \
             * (self.h - self.pt - self.pb)
 
-    def _axes(self, xlabel: str, ylabel: str, y_axis: bool = True):
+    def _axes(self, xlabel: str, ylabel: str, y_axis: bool = True,
+              x_axis: bool = True):
         bot, left = self.h - self.pb, self.pl
-        for tx in _ticks(self.x0, self.x1):
+        for tx in (_ticks(self.x0, self.x1) if x_axis else ()):
             px = float(self.sx(tx))
             self.parts.append(
                 f'<line x1="{px:.1f}" y1="{self.pt}" x2="{px:.1f}" '
@@ -388,17 +390,74 @@ def sweep_utilization(traces, width: int = 960, height: int = 240,
 
 
 # --------------------------------------------------------------------------
+# Policy scoreboard (learned-vs-heuristic comparison)
+# --------------------------------------------------------------------------
+def policy_scoreboard(rows: Sequence[dict],
+                      metrics: Sequence[str] = ("energy", "missed",
+                                                "makespan"),
+                      width: int = 960, height: int = 280,
+                      title: str = "Policy comparison (lower is better)"
+                      ) -> str:
+    """Grouped bars per policy: each metric normalized to the worst
+    policy's value (1.0 = worst), so energy / missed deadlines / makespan
+    share one axis.  ``rows`` is a list of dicts with a ``policy`` key
+    plus the metric columns — the rows element of
+    ``launch.learn.scoreboard(...)`` (which returns ``(rows, e_scale)``;
+    trained policies arrive suffixed with ``*``).  Exact values live in
+    each bar's tooltip; the text legend maps metric → color.
+    """
+    rows = list(rows)
+    if not rows:
+        return "<svg xmlns='http://www.w3.org/2000/svg'/>"
+    colors = {m: c for m, c in zip(metrics, (SERIES_1, SERIES_2, SERIES_3))}
+    maxima = {m: max(max(float(r.get(m, 0.0)) for r in rows), 1e-9)
+              for m in metrics}
+    fr = _Frame(width, height, (0.0, 1.0), (0.0, 1.05), title,
+                xlabel="", ylabel="relative to worst policy",
+                pad_b=44, x_axis=False)       # categorical x: no time ticks
+    plot_w = width - fr.pl - fr.pr
+    group_w = plot_w / len(rows)
+    bar_w = min(22.0, 0.8 * group_w / max(len(metrics), 1))
+    base = fr.sy(0.0)
+    for i, r in enumerate(rows):
+        x_mid = fr.pl + (i + 0.5) * group_w
+        x0 = x_mid - bar_w * len(metrics) / 2
+        for j, m in enumerate(metrics):
+            v = float(r.get(m, 0.0))
+            h = float(base - fr.sy(v / maxima[m]))
+            fr.parts.append(
+                f'<rect x="{x0 + j * bar_w + 1:.1f}" '
+                f'y="{base - h:.1f}" width="{bar_w - 2:.1f}" '
+                f'height="{max(h, 0.5):.1f}" rx="2" fill="{colors[m]}">'
+                f'<title>{_esc(r["policy"])} {m}: {v:g}</title></rect>')
+        fr.parts.append(
+            f'<text x="{x_mid:.1f}" y="{height - fr.pb + 26}" {FONT} '
+            f'font-size="10" fill="{INK_2}" text-anchor="middle">'
+            f'{_esc(r["policy"])}</text>')
+    fr.legend([(m, colors[m]) for m in metrics])
+    return fr.render()
+
+
+# --------------------------------------------------------------------------
 # Output
 # --------------------------------------------------------------------------
 def html_report(trace_or_state, dynamics=None,
-                title: str = "E2C simulation report") -> str:
-    """One standalone HTML page with all four charts inline."""
+                title: str = "E2C simulation report",
+                scoreboard: Sequence[dict] | None = None) -> str:
+    """One standalone HTML page with all four charts inline.
+
+    ``scoreboard`` (optional): policy-comparison rows (the rows element
+    of ``launch.learn.scoreboard(...)``) — appends a
+    ``policy_scoreboard`` chart.
+    """
     charts = [
         gantt(trace_or_state, dynamics=dynamics),
         utilization(trace_or_state),
         queue_depth(trace_or_state),
         energy_over_time(trace_or_state),
     ]
+    if scoreboard is not None:
+        charts.append(policy_scoreboard(scoreboard))
     body = "\n".join(f'<figure style="margin:16px 0">{c}</figure>'
                      for c in charts)
     return (

@@ -184,6 +184,22 @@ def onoff_workload(n_tasks: int, rate: float, n_task_types: int, *,
     return Workload(arrival, type_id, deadline.astype(np.float32))
 
 
+# Named arrival processes with a common call shape, so grid builders can
+# treat "arrival pattern" as a sweep axis (launch/sim.py, launch/learn.py):
+# f(n_tasks, rate, n_task_types, mean_eet, seed) -> Workload
+ARRIVAL_GENERATORS = {
+    "poisson": lambda n, rate, ntt, me, seed: poisson_workload(
+        n, rate=rate, n_task_types=ntt, mean_eet=me, slack=4.0, seed=seed),
+    "bursty": lambda n, rate, ntt, me, seed: bursty_workload(
+        n, rate=rate, n_task_types=ntt, mean_eet=me, slack=4.0, seed=seed),
+    "diurnal": lambda n, rate, ntt, me, seed: diurnal_workload(
+        n, base_rate=rate, n_task_types=ntt, mean_eet=me, slack=4.0,
+        seed=seed),
+    "onoff": lambda n, rate, ntt, me, seed: onoff_workload(
+        n, rate=rate, n_task_types=ntt, mean_eet=me, slack=4.0, seed=seed),
+}
+
+
 # ---------------------------------------------------------------------------
 # Machine dynamics: availability traces + DVFS states
 # ---------------------------------------------------------------------------

@@ -28,7 +28,8 @@ from repro.core import engine as E
 from repro.core import schedulers as P
 from repro.core import state as S
 from repro.core.eet import EETTable, synth_eet
-from repro.core.workload import make_scenario, poisson_workload
+from repro.core.workload import (ARRIVAL_GENERATORS, make_scenario,
+                                 poisson_workload)
 
 
 def summarize_replica(st: S.SimState, tables: S.StaticTables,
@@ -68,8 +69,22 @@ def summarize_replica(st: S.SimState, tables: S.StaticTables,
 
 
 def build_sim_sweep(n_tasks: int, n_machines: int,
-                    params: E.SimParams = E.SimParams()):
-    """-> f(task_table[R], mtype[R,M], tables[R], policy[R]) -> metrics[R]."""
+                    params: E.SimParams = E.SimParams(),
+                    learned: bool = False):
+    """-> f(task_table[R], mtype[R,M], tables[R], policy[R]) -> metrics[R].
+
+    With ``learned=True`` the sweep takes one extra ``policy_params``
+    pytree (``neural.PolicyParams``) SHARED across replicas (vmap axis
+    ``None``) — the shape used to evaluate one trained policy against a
+    replica grid.  For a *population* of parameter vectors (ES training)
+    vmap the params axis instead — see ``core/train_policy.py``.
+    """
+    if learned:
+        def one_pp(tasks, mtype, tables, policy_id, policy_params):
+            st = E.run_sim(tasks, mtype, tables, policy_id, params,
+                           policy_params=policy_params)
+            return summarize_replica(st, tables)
+        return jax.vmap(one_pp, in_axes=(0, 0, 0, 0, None))
 
     def one(tasks, mtype, tables, policy_id):
         st = E.run_sim(tasks, mtype, tables, policy_id, params)
@@ -79,14 +94,25 @@ def build_sim_sweep(n_tasks: int, n_machines: int,
 
 
 def build_scenario_sweep(n_tasks: int, n_machines: int,
-                         params: E.SimParams = E.SimParams()):
+                         params: E.SimParams = E.SimParams(),
+                         learned: bool = False):
     """Scenario-axis sweep: like ``build_sim_sweep`` plus a stacked
     ``MachineDynamics`` input, so a Monte-Carlo grid over failure rates /
     spot semantics / DVFS states shards like any other replica axis.
 
     -> f(task_table[R], mtype[R,M], tables[R], policy[R], dynamics[R])
        -> metrics[R]
+
+    ``learned=True`` appends a shared ``policy_params`` argument exactly
+    like ``build_sim_sweep``.
     """
+    if learned:
+        def one_pp(tasks, mtype, tables, policy_id, dynamics,
+                   policy_params):
+            st = E.run_sim(tasks, mtype, tables, policy_id, params,
+                           dynamics, policy_params)
+            return summarize_replica(st, tables, dynamics)
+        return jax.vmap(one_pp, in_axes=(0, 0, 0, 0, 0, None))
 
     def one(tasks, mtype, tables, policy_id, dynamics):
         st = E.run_sim(tasks, mtype, tables, policy_id, params, dynamics)
@@ -134,20 +160,51 @@ def trace_replica(inputs: tuple, i: int,
     return E.run_sim(rep[0], rep[1], rep[2], rep[3], params, dyn)
 
 
+_SWEEP_CACHE: dict = {}
+
+
+def jitted_scenario_sweep(n_tasks: int, n_machines: int,
+                          params: E.SimParams = E.SimParams(),
+                          learned: bool = False):
+    """Cached ``jax.jit(build_scenario_sweep(...))``.
+
+    ``build_scenario_sweep`` returns a fresh closure each call, so
+    wrapping it in ``jax.jit`` at the call site recompiles the identical
+    engine sweep every time; evaluation helpers that sweep repeatedly
+    (``launch/learn.py`` scoreboards, ``core/train_policy.py`` e_scale
+    calibration) go through this cache instead — one compilation per
+    (shape, params, learned) per process.
+    """
+    key = (n_tasks, n_machines, params, learned)
+    if key not in _SWEEP_CACHE:
+        _SWEEP_CACHE[key] = jax.jit(
+            build_scenario_sweep(n_tasks, n_machines, params, learned))
+    return _SWEEP_CACHE[key]
+
+
 _GROUPED_CACHE: dict = {}
 
 
-def _grouped_fn(pid: int, params: E.SimParams):
-    key = (pid, params)
+def _grouped_fn(pid: int, params: E.SimParams, learned: bool = False):
+    key = (pid, params, learned)
     if key not in _GROUPED_CACHE:
-        def one(tasks, mtype, tables):
-            st = E.run_sim(tasks, mtype, tables, jnp.int32(pid), params)
-            return summarize_replica(st, tables)
-        _GROUPED_CACHE[key] = jax.jit(jax.vmap(one))
+        if learned:
+            def one_pp(tasks, mtype, tables, policy_params):
+                st = E.run_sim(tasks, mtype, tables, jnp.int32(pid), params,
+                               policy_params=policy_params)
+                return summarize_replica(st, tables)
+            _GROUPED_CACHE[key] = jax.jit(
+                jax.vmap(one_pp, in_axes=(0, 0, 0, None)))
+        else:
+            def one(tasks, mtype, tables):
+                st = E.run_sim(tasks, mtype, tables, jnp.int32(pid), params)
+                return summarize_replica(st, tables)
+            _GROUPED_CACHE[key] = jax.jit(jax.vmap(one))
     return _GROUPED_CACHE[key]
 
 
-def run_grouped_sweep(inputs, params: E.SimParams = E.SimParams()):
+def run_grouped_sweep(inputs, params: E.SimParams = E.SimParams(),
+                      policy_params=None):
     """Policy-grouped sweep: one vmap per distinct policy id.
 
     A *vmapped* ``lax.switch`` over per-replica policy ids computes EVERY
@@ -155,6 +212,10 @@ def run_grouped_sweep(inputs, params: E.SimParams = E.SimParams()):
     grouping replicas by policy makes the id a trace-time constant, so
     each group compiles exactly one policy's drain logic — §Perf sim-cell
     iteration.  Returns metrics in the original replica order.
+
+    ``policy_params`` (optional ``neural.PolicyParams``, shared by all
+    replicas) supplies learned-policy weights — how learned-vs-heuristic
+    dispatch overhead is measured (benchmarks/bench_engine.py).
     """
     tt, mt, tb, pids = inputs
     pids_np = np.asarray(pids)
@@ -162,8 +223,11 @@ def run_grouped_sweep(inputs, params: E.SimParams = E.SimParams()):
     for pid in np.unique(pids_np):
         sel = np.nonzero(pids_np == pid)[0]
         take = lambda x: jax.tree.map(lambda a: a[sel], x)
-        fn = _grouped_fn(int(pid), params)
-        out_parts[int(pid)] = (sel, fn(take(tt), take(mt), take(tb)))
+        fn = _grouped_fn(int(pid), params, policy_params is not None)
+        args = (take(tt), take(mt), take(tb))
+        if policy_params is not None:
+            args = args + (policy_params,)
+        out_parts[int(pid)] = (sel, fn(*args))
     # stitch back to original order
     R = pids_np.shape[0]
     keys = out_parts[int(pids_np[0])][1].keys()
@@ -212,14 +276,20 @@ def make_scenario_replicas(n_replicas: int, n_tasks: int, n_machines: int,
                            *, policies: list[str] | None = None,
                            fail_rates: list[float] | None = None,
                            dvfs_states: list[str] | None = None,
+                           arrivals: tuple[str, ...] | None = None,
                            spot_frac: float = 0.5, mttr: float = 4.0,
                            n_intervals: int = 4, rate: float = 4.0,
                            seed: int = 0) -> tuple:
-    """Host-side scenario grid: (failure rate x DVFS state x policy)
-    cells, one replica each, stacked for one jitted
+    """Host-side scenario grid: (failure rate x DVFS state x policy
+    [x arrival pattern]) cells, one replica each, stacked for one jitted
     ``build_scenario_sweep`` call.  Eviction semantics is NOT a grid
     axis: each replica draws kill-vs-requeue as an independent Bernoulli
     (``spot_frac``) — pin it to 0.0 or 1.0 to compare the two cleanly.
+
+    ``arrivals`` (optional) adds the arrival process as the outermost
+    grid axis — names from ``workload.ARRIVAL_GENERATORS`` ("poisson",
+    "bursty", "diurnal", "onoff"); omitted = Poisson everywhere, which
+    also preserves the exact replica draws of earlier revisions.
 
     Returns ``(task_tables, mtypes, tables, policy_ids, dynamics)`` with a
     leading replica axis on every leaf.
@@ -227,7 +297,7 @@ def make_scenario_replicas(n_replicas: int, n_tasks: int, n_machines: int,
     policies = policies or ["mct", "minmin", "ee_mct"]
     fail_rates = fail_rates if fail_rates is not None else [0.0, 0.05, 0.2]
     dvfs_states = dvfs_states or ["nominal", "powersave"]
-    n_f, n_d = len(fail_rates), len(dvfs_states)
+    n_f, n_d, n_p = len(fail_rates), len(dvfs_states), len(policies)
     rng = np.random.default_rng(seed)
     tts, mts, tabs, pids, dyns = [], [], [], [], []
     for r in range(n_replicas):
@@ -236,12 +306,18 @@ def make_scenario_replicas(n_replicas: int, n_tasks: int, n_machines: int,
         power = np.stack([
             rng.uniform(20, 60, n_machine_types),
             rng.uniform(80, 300, n_machine_types)], axis=1)
-        wl = poisson_workload(n_tasks, rate=rate,
-                              n_task_types=n_task_types,
-                              mean_eet=eet.eet.mean(1), slack=4.0,
-                              seed=seed + 7919 * r)
-        # mixed-radix decomposition r -> (fail, dvfs, policy) so the
-        # grid axes never alias (spot stays an independent random draw)
+        if arrivals is None:
+            wl = poisson_workload(n_tasks, rate=rate,
+                                  n_task_types=n_task_types,
+                                  mean_eet=eet.eet.mean(1), slack=4.0,
+                                  seed=seed + 7919 * r)
+        else:
+            gen = ARRIVAL_GENERATORS[
+                arrivals[(r // (n_f * n_d * n_p)) % len(arrivals)]]
+            wl = gen(n_tasks, rate, n_task_types, eet.eet.mean(1),
+                     seed + 7919 * r)
+        # mixed-radix decomposition r -> (fail, dvfs, policy, arrival) so
+        # the grid axes never alias (spot stays an independent random draw)
         scen = make_scenario(
             wl, n_machines,
             fail_rate=fail_rates[r % n_f],
@@ -254,8 +330,7 @@ def make_scenario_replicas(n_replicas: int, n_tasks: int, n_machines: int,
         mts.append(rng.integers(0, n_machine_types, n_machines))
         tabs.append(E.make_tables(eet, power.astype(np.float32), n_tasks,
                                   noise=noise))
-        pids.append(P.POLICY_IDS[
-            policies[(r // (n_f * n_d)) % len(policies)]])
+        pids.append(P.POLICY_IDS[policies[(r // (n_f * n_d)) % n_p]])
         dyns.append(scen.dynamics())
     stack = lambda trees: jax.tree.map(
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees)

@@ -1,0 +1,108 @@
+"""Custom-policy plumbing end-to-end (paper feature (ii)).
+
+``register_policy`` must round-trip through ``dispatch`` (the id gets a
+real ``lax.switch`` branch), through ``simulate`` and through
+``run_sweep`` with *mixed* policy ids — and duplicate names must raise.
+
+Shapes in this file are deliberately unique (one extra task/machine vs
+other suites): ``run_sim`` is jitted and its cache key does NOT include
+the policy registry, so a compilation cached *before* registration would
+silently clamp a new policy id to the last old branch.  Registering
+before the first engine call for a given shape — as done here and
+documented in docs/adding_a_scheduler.md — avoids that.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core import schedulers as P
+from repro.core.eet import synth_eet
+from repro.core.workload import poisson_workload
+
+# unique shapes -> fresh jit compilations that include the new branch
+N_TASKS, N_MACHINES = 19, 5
+
+
+def _instance(seed=0):
+    rng = np.random.default_rng(seed)
+    eet = synth_eet(3, 2, inconsistency=0.4, seed=seed)
+    power = np.stack([rng.uniform(10, 50, 2), rng.uniform(60, 200, 2)],
+                     axis=1).astype(np.float32)
+    wl = poisson_workload(N_TASKS, rate=2.0, n_task_types=3,
+                          mean_eet=eet.eet.mean(1), slack=8.0, seed=seed)
+    mtype = rng.integers(0, 2, N_MACHINES)
+    return eet, power, wl, mtype
+
+
+def lowest_id_policy(state, tables, view, rr_ptr, params):
+    """Always map the head task to the lowest-id machine with room."""
+    scores = jnp.arange(view.room.shape[0], dtype=jnp.float32)
+    return P._head_decision(view, scores)
+
+
+@pytest.fixture
+def registry_snapshot():
+    """Register-and-restore: keep the global policy tables clean."""
+    before = (dict(P.SCHEDULERS), list(P.POLICY_NAMES), dict(P.POLICY_IDS))
+    yield
+    P.SCHEDULERS.clear()
+    P.SCHEDULERS.update(before[0])
+    P.POLICY_NAMES[:] = before[1]
+    P.POLICY_IDS.clear()
+    P.POLICY_IDS.update(before[2])
+
+
+def test_register_roundtrip_single_run(registry_snapshot):
+    pid = P.register_policy("lowest_id", lowest_id_policy)
+    assert P.POLICY_IDS["lowest_id"] == pid == len(P.POLICY_NAMES) - 1
+    eet, power, wl, mtype = _instance(0)
+    st = E.simulate(wl, eet, power, mtype, policy="lowest_id",
+                    cancel_infeasible=False, lcap=N_TASKS)
+    status = np.asarray(st.tasks.status)
+    machine = np.asarray(st.tasks.machine)
+    # with room for everything, every mapped task went to machine 0
+    mapped = machine >= 0
+    assert mapped.any()
+    assert (machine[mapped] == 0).all(), machine
+    assert (status >= 4).all()          # all terminal
+
+
+def test_custom_id_survives_lax_switch_in_sweep(registry_snapshot):
+    """Mixed policy ids in one vmapped sweep: the custom branch must be
+    taken for exactly the replicas that ask for it."""
+    P.register_policy("lowest_id2", lowest_id_policy)
+    eet, power, wl, mtype = _instance(3)
+    tables = E.make_tables(eet, power, wl.n_tasks)
+    tt = wl.to_task_table()
+    import jax
+    k = 4
+    stack = lambda x: jax.tree.map(
+        lambda a: jnp.broadcast_to(jnp.asarray(a),
+                                   (k,) + jnp.asarray(a).shape), x)
+    pids = jnp.asarray([P.POLICY_IDS["lowest_id2"], P.POLICY_IDS["mct"],
+                        P.POLICY_IDS["lowest_id2"], P.POLICY_IDS["fcfs"]],
+                       jnp.int32)
+    params = E.SimParams(lcap=N_TASKS, cancel_infeasible=False)
+    out = E.run_sweep(stack(tt), stack(jnp.asarray(mtype)), stack(tables),
+                      pids, params)
+    machine = np.asarray(out.tasks.machine)
+    for i in (0, 2):                     # custom replicas: machine 0 only
+        mapped = machine[i] >= 0
+        assert (machine[i][mapped] == 0).all(), (i, machine[i])
+    # the mct replica matches a single mct run (the switch didn't leak)
+    single = E.run_sim(tt, jnp.asarray(mtype), tables,
+                       jnp.int32(P.POLICY_IDS["mct"]), params)
+    np.testing.assert_array_equal(machine[1],
+                                  np.asarray(single.tasks.machine))
+
+
+def test_duplicate_registration_raises(registry_snapshot):
+    P.register_policy("dup_policy", lowest_id_policy)
+    with pytest.raises(ValueError, match="already registered"):
+        P.register_policy("dup_policy", lowest_id_policy)
+    # built-ins are protected the same way
+    with pytest.raises(ValueError, match="already registered"):
+        P.register_policy("mct", lowest_id_policy)
