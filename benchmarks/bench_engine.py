@@ -23,7 +23,8 @@ from repro.core import ref_engine as RE
 from repro.core import schedulers as P
 from repro.launch.sim import (build_scenario_sweep, build_sim_sweep,
                               build_traced_sweep, make_replicas,
-                              make_scenario_replicas, run_grouped_sweep)
+                              make_scenario_replicas,
+                              make_workflow_replicas, run_grouped_sweep)
 
 N_TASKS, N_MACHINES = 128, 16
 
@@ -91,6 +92,44 @@ def time_learned_dispatch(n_replicas: int) -> tuple[float, float]:
     return times[0], times[1]                        # (mct, mlp) s/replica
 
 
+def time_workflow_sweep(n_replicas: int) -> tuple[float, float, float]:
+    """DAG-engine rows (docs/workflows.md, EXPERIMENTS.md §Perf).
+
+    Three per-replica timings at the same N, all single-policy (mct) so
+    the drain logic is identical:
+
+    * ``chain``   — a fully sequential chain workflow (the dependency-
+      release phase is doing maximal work: one release per task);
+    * ``inert``   — the *independent* workload run with an all(-1)
+      parent table, i.e. the ``has_deps`` machinery compiled in but
+      semantically idle — the pure machinery cost T7 bounds;
+    * ``plain``   — the same independent workload with ``parents=None``
+      (the pre-DAG engine, T7's baseline).
+    """
+    wf_in = make_workflow_replicas(n_replicas, N_TASKS, N_MACHINES,
+                                   shapes=("chain",), policies=["mct"],
+                                   seed=0)
+    chain_inputs = wf_in[:4] + (wf_in[5],)
+    dag_sweep = jax.jit(build_sim_sweep(N_TASKS, N_MACHINES,
+                                        workflow=True))
+    base = make_replicas(n_replicas, N_TASKS, N_MACHINES,
+                         policies=["mct"], seed=0)
+    inert_inputs = base + (jnp.full((n_replicas, N_TASKS, 1), -1,
+                                    jnp.int32),)
+    plain_sweep = jax.jit(build_sim_sweep(N_TASKS, N_MACHINES))
+    times = []
+    for fn, inputs in ((dag_sweep, chain_inputs),
+                       (dag_sweep, inert_inputs),
+                       (plain_sweep, base)):
+        out = fn(*inputs)                      # compile + warm
+        jax.block_until_ready(out["completed"])
+        t0 = time.perf_counter()
+        out = fn(*inputs)
+        jax.block_until_ready(out["completed"])
+        times.append((time.perf_counter() - t0) / n_replicas)
+    return times[0], times[1], times[2]        # (chain, inert, plain)
+
+
 def run(out_dir=None, smoke: bool = False) -> dict:
     # ref engine indexes tuple fields positionally; rebuild host-side
     inputs = make_replicas(2, N_TASKS, N_MACHINES, seed=0)
@@ -149,6 +188,17 @@ def run(out_dir=None, smoke: bool = False) -> dict:
                  "per_replica_ms": round(trace_per * 1e3, 3),
                  "replicas_per_s": round(scen_n / trace_total, 1)})
 
+    # workflow (DAG) engine: chain vs independent at the same N, plus
+    # the inert-parents run that isolates the has_deps machinery (T7)
+    chain_per, inert_per, plain_per = time_workflow_sweep(scen_n)
+    for label, per in (("chain DAG", chain_per),
+                       ("independent + deps machinery", inert_per),
+                       ("independent, mct", plain_per)):
+        rows.append({"replicas": f"{scen_n} ({label})",
+                     "total_s": round(per * scen_n, 4),
+                     "per_replica_ms": round(per * 1e3, 3),
+                     "replicas_per_s": round(1 / per, 1)})
+
     # learned-policy dispatch: MLP with the MCT warm start vs MCT itself
     # (identical decisions; difference = feature build + forward pass)
     mct_per, mlp_per = time_learned_dispatch(scen_n)
@@ -172,6 +222,7 @@ def run(out_dir=None, smoke: bool = False) -> dict:
         "T5_trace_overhead_bounded": bool(
             trace_per * 1e3 < 3 * static_same_n),
         "T6_learned_dispatch_overhead_bounded": bool(mlp_per < 3 * mct_per),
+        "T7_has_deps_overhead_bounded": bool(inert_per < 2 * plain_per),
     }
     payload = {"rows": rows,
                "ref_per_replica_ms": round(ref_per_replica * 1e3, 2),

@@ -1,0 +1,65 @@
+"""Workflow (DAG) workloads end-to-end in ~40 lines.
+
+    PYTHONPATH=src python examples/workflow_sweep.py [outdir]
+
+1. Builds a fork-join workflow (source -> 8 parallel branches of 2
+   tasks -> join) over a heterogeneous 4-machine fleet, runs it with
+   the HEFT policy and ``trace=True``, and renders the Gantt chart with
+   dependency arrows + the realized critical-path overlay — the
+   ``examples/gallery/workflow_gantt.svg`` committed in the README
+   comes from exactly this script.
+2. Sweeps a (policy x DAG shape) grid in ONE jitted call
+   (``build_scenario_sweep(workflow=True)``) and prints the per-policy
+   mean makespan and completions.  HEFT optimizes *makespan* (its
+   upward-rank ordering keeps the critical path moving) and wins that
+   column; it is deadline-blind, so under deadline pressure MCT can
+   complete more tasks — read both columns.  See docs/workflows.md.
+"""
+import sys
+
+import numpy as np
+
+from repro.core import engine, report, viz
+from repro.core.eet import synth_eet
+from repro.core.workload import fork_join_workflow
+
+# --- 1. one traced fork-join run + the annotated Gantt ---------------------
+eet = synth_eet(3, 2, inconsistency=0.6, seed=41)
+power = np.array([[10.0, 80.0], [20.0, 160.0]], np.float32)
+wf = fork_join_workflow(8, 2, 3, mean_eet=eet.eet.mean(1), slack=50.0,
+                        seed=41)
+final = engine.simulate(wf, eet, power, machine_types=[0, 0, 1, 1],
+                        policy="heft", trace=True)
+row = report.summarize(
+    final, engine.make_tables(eet, power, wf.n_tasks))
+print(f"fork-join x heft: completed {row['completed']}/{wf.n_tasks}, "
+      f"makespan {row['makespan']:.2f}s, "
+      f"fleet heterogeneity {row['heterogeneity']:.3f}")
+
+outdir = sys.argv[1] if len(sys.argv) > 1 else "examples/gallery"
+path = viz.save(f"{outdir}/workflow_gantt.svg",
+                viz.gantt(final, workflow=wf,
+                          title="Fork-join workflow (HEFT): arrows = "
+                                "dependencies, outline = critical path"))
+print("wrote", path)
+
+# --- 2. (policy x DAG shape) sweep in one jitted call ----------------------
+import jax  # noqa: E402
+
+from repro.launch.sim import (build_scenario_sweep,  # noqa: E402
+                              make_workflow_replicas)
+
+policies = ["heft", "mct", "rr"]
+inputs = make_workflow_replicas(18, 24, 4, policies=policies,
+                                shapes=("chain", "fork_join", "layered"),
+                                seed=0)
+sweep = jax.jit(build_scenario_sweep(24, 4, workflow=True))
+out = sweep(*inputs)
+mk = np.asarray(out["makespan"])
+done = np.asarray(out["completed"])
+print("\npolicy   mean_makespan  mean_completed   (18 paired DAG replicas;")
+print("                                  heft targets makespan and is")
+print("                                  deadline-blind — read both columns)")
+for i, pol in enumerate(policies):
+    sel = np.arange(len(mk)) % len(policies) == i
+    print(f"{pol:8s} {mk[sel].mean():12.2f}  {done[sel].mean():10.1f}")

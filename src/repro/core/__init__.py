@@ -23,18 +23,22 @@ from repro.core.neural import (LEARNED_POLICIES, LinearParams, MLPParams,
 from repro.core.train_policy import (ESConfig, TrainResult,
                                      miss_energy_score, train)
 from repro.core.report import (SimReport, ascii_gantt, format_report,
-                               metrics, trace_table)
+                               heterogeneity, metrics, summarize,
+                               trace_table)
 from repro.core.schedulers import (BATCH_POLICIES, POLICY_IDS, POLICY_NAMES,
                                    SCHEDULERS, register_policy)
 from repro.core.state import MachineDynamics, machine_up, static_dynamics
 from repro.core.trace import EVENT_NAMES, TraceBuffer
 from repro.core import viz
-from repro.core.workload import (DVFS_STATES, Scenario, Workload,
-                                 bursty_workload, diurnal_workload,
-                                 failure_trace, load_workload_csv,
-                                 make_scenario, onoff_workload,
-                                 poisson_workload, save_workload_csv,
-                                 uniform_workload)
+from repro.core.workload import (DVFS_STATES, WORKFLOW_GENERATORS, Scenario,
+                                 Workflow, Workload, bursty_workload,
+                                 chain_workflow, diurnal_workload,
+                                 failure_trace, fork_join_workflow,
+                                 layered_workflow, load_workload_csv,
+                                 make_scenario, map_reduce_workflow,
+                                 onoff_workload, poisson_workload,
+                                 save_workload_csv, uniform_workload,
+                                 upward_ranks)
 
 __all__ = [
     "EETTable", "default_power", "eet_from_roofline", "homogeneous_eet",
@@ -50,6 +54,10 @@ __all__ = [
     "onoff_workload",
     # trace capture + headless visualization
     "TraceBuffer", "EVENT_NAMES", "trace_table", "viz",
+    # workflow (DAG) workloads + precedence-aware scheduling
+    "Workflow", "WORKFLOW_GENERATORS", "chain_workflow",
+    "fork_join_workflow", "layered_workflow", "map_reduce_workflow",
+    "upward_ranks", "heterogeneity", "summarize",
     # learned scheduling (parameterized policies + in-sim ES training)
     "LEARNED_POLICIES", "LinearParams", "MLPParams", "PolicyParams",
     "default_params", "ee_mlp_params", "init_params", "machine_features",

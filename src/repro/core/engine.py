@@ -15,7 +15,12 @@ Event ordering within a timestamp `t` (matches the E2C loop):
      preempt their running task and flush their queue — kill to the
      PREEMPTED pool or requeue to the batch queue; partial energy is
      charged either way),
-  3. arrivals     (``arrival <= t`` -> batch queue, overflow -> cancelled),
+  2b. dependency release (workflow mode only: refresh each task's
+     remaining-parents counter from the status column; tasks whose
+     parents all terminated but not all *completed* can never run and
+     are cancelled — cascades resolve to a fixpoint within the phase),
+  3. arrivals     (``arrival <= t`` AND all parents completed -> batch
+     queue, overflow -> cancelled),
   4. deadline drops (queued -> MISSED_QUEUE, running -> MISSED_RUNNING and
      the machine is freed; partial energy is charged),
   5. scheduler drain (policy picks (task, machine) pairs until no room / no
@@ -23,6 +28,13 @@ Event ordering within a timestamp `t` (matches the E2C loop):
      cancellation wrapper may send tasks to the cancelled pool),
   6. start tasks on idle *available* machines (lowest mapping-sequence
      first — FIFO within a machine queue, E2C's sequential execution).
+
+Workflows: ``run_sim(..., parents=(N, K) int32)`` makes task precedence
+first-class — a task's effective arrival is ``max(arrival, completion of
+all parents)``.  The static ``has_deps`` choice is a Python-level
+``parents is None`` check (like tracing), so independent-task mode
+compiles the identical HLO it compiled before DAGs existed.  See
+docs/workflows.md.
 
 DVFS: each machine's ``speed`` divides its EET row (both the scheduler's
 expectations and actual runtimes) and ``power_scale`` multiplies its
@@ -165,9 +177,55 @@ def _availability(st: S.SimState, tb: S.StaticTables,
                    mq_count=mq_count)
 
 
+def _release(st: S.SimState, parents: jnp.ndarray) -> S.SimState:
+    """Workflow-mode phase: refresh dependency state, cancel dead branches.
+
+    Runs between availability and arrivals.  The remaining-parents
+    counter (``SimState.deps_left``) is recomputed from the status
+    column — exact integer math, no drift — and tasks whose parents have
+    all terminated with at least one *failure* (cancelled / missed /
+    preempted) are cancelled: they can never satisfy their precedence
+    constraint.  Cancelling such a task may doom its own children, so
+    the phase iterates to a fixpoint (each trip resolves one cascade
+    level; the loop is bounded by the not-yet-arrived population).
+
+    Tracing note: like the drain loop, cascade cancels are recorded once
+    per event via a status diff (task-id order), keeping the buffers out
+    of the while-loop carry; the reference engine emits the same order.
+    """
+    n = st.tasks.arrival.shape[0]
+    status_before = st.tasks.status
+    trace = st.trace
+    st = replace(st, trace=None)
+
+    def body(c):
+        s, _ = c
+        left, failed = S.dep_state(s.tasks.status, parents)
+        kill = (s.tasks.status == S.NOT_ARRIVED) & (left == 0) & failed
+        tasks = replace(
+            s.tasks,
+            status=jnp.where(kill, S.CANCELLED, s.tasks.status),
+            t_end=jnp.where(kill, s.time, s.tasks.t_end))
+        return replace(s, tasks=tasks, deps_left=left), kill.any()
+
+    st, _ = jax.lax.while_loop(lambda c: c[1], body,
+                               (st, jnp.bool_(True)))
+    if trace is not None:
+        killed = (status_before == S.NOT_ARRIVED) & (
+            st.tasks.status == S.CANCELLED)
+        trace = T.record(trace, st.time, T.EV_CANCEL, jnp.arange(n), -1,
+                         killed)
+    # deps_left is current: the loop only exits on a pass that changed
+    # nothing, so the last stored counters reflect the final statuses
+    # (the arrivals phase reads deps_left == 0 as "all parents completed")
+    return replace(st, trace=trace)
+
+
 def _arrivals(st: S.SimState, qcap: int) -> S.SimState:
     tasks = st.tasks
     new = (tasks.status == S.NOT_ARRIVED) & (tasks.arrival <= st.time)
+    if st.deps_left is not None:
+        new = new & (st.deps_left == 0)
     in_batch = jnp.sum(tasks.status == S.IN_BATCH)
     pos = jnp.cumsum(new.astype(jnp.int32))           # 1-based admission rank
     admitted = new & (in_batch + pos <= qcap)
@@ -327,10 +385,26 @@ def _start_tasks(st: S.SimState, tb: S.StaticTables,
 
 
 def _next_event_time(st: S.SimState,
-                     dyn: S.MachineDynamics | None = None) -> jnp.ndarray:
+                     dyn: S.MachineDynamics | None = None,
+                     parents: jnp.ndarray | None = None) -> jnp.ndarray:
     tasks, mach = st.tasks, st.machines
-    t_arr = jnp.min(jnp.where(tasks.status == S.NOT_ARRIVED,
-                              tasks.arrival, S.INF))
+    not_arrived = tasks.status == S.NOT_ARRIVED
+    if parents is None:
+        t_arr = jnp.min(jnp.where(not_arrived, tasks.arrival, S.INF))
+    else:
+        # a dependency-blocked task has no pending arrival event: its
+        # release rides on a parent's terminal transition, which is
+        # already an event candidate (completion / deadline / cancel).
+        left, failed = S.dep_state(tasks.status, parents)
+        t_arr = jnp.min(jnp.where(not_arrived & (left == 0) & ~failed,
+                                  tasks.arrival, S.INF))
+        # a parent that *failed* during phases 3-6 (overflow cancel,
+        # deadline drop, drain cancel) leaves a cascade pending after
+        # the release phase already ran — process it at the current
+        # timestamp so the doomed subtree terminates promptly.
+        pending = not_arrived & (left == 0) & failed
+        t_arr = jnp.minimum(t_arr, jnp.where(pending.any(), st.time,
+                                             S.INF))
     t_cmp = jnp.min(jnp.where(mach.running >= 0, mach.busy_until, S.INF))
     live = (tasks.status == S.IN_BATCH) | (tasks.status == S.IN_MQ) | (
         tasks.status == S.RUNNING)
@@ -353,7 +427,8 @@ def _next_event_time(st: S.SimState,
 def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
             policy_id: jnp.ndarray, params: SimParams = SimParams(),
             dynamics: S.MachineDynamics | None = None,
-            policy_params: NN.PolicyParams | None = None) -> S.SimState:
+            policy_params: NN.PolicyParams | None = None,
+            parents: jnp.ndarray | None = None) -> S.SimState:
     """Run one simulation replica to completion; returns the final state.
 
     All array arguments may carry leading batch dims via ``vmap`` (see
@@ -363,17 +438,24 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
     (optional) carries learned-policy weights (``neural.PolicyParams``) —
     when omitted the zero default is used, so heuristic runs need not
     build one; vmapping this axis evaluates a *population* of policies
-    (core/train_policy.py).
+    (core/train_policy.py).  ``parents`` (optional, (N, K) int32 padded
+    with -1) adds workflow precedence constraints — a task arrives only
+    once every parent completed (docs/workflows.md); omitting it
+    compiles the independent-task engine with zero DAG overhead.
     """
     if policy_params is None:
         policy_params = NN.default_params()
-    st = S.init_state(tasks, mtype, dynamics)
+    st = S.init_state(tasks, mtype, dynamics, parents)
     n = tasks.arrival.shape[0]
     n_m = mtype.shape[-1]
     max_events = params.max_events or (4 * n + 16)
     if dynamics is not None and params.max_events is None:
         # every down interval contributes at most 2 extra events
         max_events += 2 * dynamics.down_start.shape[-1] * n_m
+    if parents is not None and params.max_events is None:
+        # every failure-release cascade echoes at most one extra event
+        # per cancelled task (same-timestamp re-entry)
+        max_events += n
     if params.trace:
         k = dynamics.down_start.shape[-1] if dynamics is not None else 0
         cap = params.trace_capacity or T.row_capacity_bound(
@@ -396,13 +478,15 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
         return ~done & (st.n_events < max_events)
 
     def body(st):
-        t = _next_event_time(st, dynamics)
+        t = _next_event_time(st, dynamics, parents)
         st = replace(st, time=t)
         st = _completions(st, tables)
         up = None
         if dynamics is not None:
             st = _availability(st, tables, dynamics)
             up = S.machine_up(dynamics, st.time)
+        if parents is not None:
+            st = _release(st, parents)
         st = _arrivals(st, params.qcap)
         st = _deadline_drops(st, tables)
         st = _drain(st, tables, policy_id, params, const, up, policy_params)
@@ -415,17 +499,23 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
 
 
 def make_tables(eet: EETTable | np.ndarray, power: np.ndarray,
-                n_tasks: int, *, noise: np.ndarray | None = None
-                ) -> S.StaticTables:
+                n_tasks: int, *, noise: np.ndarray | None = None,
+                rank: np.ndarray | None = None) -> S.StaticTables:
+    """``rank`` (optional (N,) f32): HEFT upward ranks for workflow
+    workloads (``workload.upward_ranks``); zeros otherwise, where the
+    ``heft`` policy degenerates to head-of-queue MCT."""
     eet_arr = eet.eet if isinstance(eet, EETTable) else np.asarray(eet)
     if noise is None:
         noise = np.ones((n_tasks,), np.float32)
+    if rank is None:
+        rank = np.zeros((n_tasks,), np.float32)
     return S.StaticTables(eet=jnp.asarray(eet_arr, jnp.float32),
                           power=jnp.asarray(power, jnp.float32),
-                          noise=jnp.asarray(noise, jnp.float32))
+                          noise=jnp.asarray(noise, jnp.float32),
+                          rank=jnp.asarray(rank, jnp.float32))
 
 
-def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
+def simulate(workload, eet: EETTable, power: np.ndarray,
              machine_types: np.ndarray | list[int], policy: str = "mct",
              *, lcap: int = 4, qcap: int | None = None,
              cancel_infeasible: bool = True,
@@ -436,6 +526,10 @@ def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
              policy_params: NN.PolicyParams | None = None) -> S.SimState:
     """Host-friendly wrapper: one replica, named policy.
 
+    ``workload`` is a ``workload.Workload`` (independent tasks) or a
+    ``workload.Workflow`` (DAG) — the latter threads its parent table
+    into the engine's dependency-release phase and precomputes the HEFT
+    upward ranks from the EET row means (docs/workflows.md).
     ``dynamics`` makes the fleet dynamic (failures / spot preemption /
     DVFS) — build one with ``workload.Scenario.dynamics()`` or
     ``state.static_dynamics``.  ``trace=True`` attaches a
@@ -444,20 +538,30 @@ def simulate(workload: Workload, eet: EETTable, power: np.ndarray,
     docs/visualization.md).  ``policy_params`` supplies learned-policy
     weights for the ``mlp``/``linear`` policies (docs/learned_scheduling.md).
     """
+    from repro.core.workload import Workflow
+    parents = rank = None
+    if isinstance(workload, Workflow):
+        eet_arr = eet.eet if isinstance(eet, EETTable) else np.asarray(eet)
+        parents = jnp.asarray(workload.parents, jnp.int32)
+        rank = workload.ranks(np.asarray(eet_arr).mean(axis=1))
+        workload = workload.workload
     params = SimParams(lcap=lcap, qcap=qcap or (1 << 30),
                        cancel_infeasible=cancel_infeasible, trace=trace,
                        trace_capacity=trace_capacity)
-    tables = make_tables(eet, power, workload.n_tasks, noise=noise)
+    tables = make_tables(eet, power, workload.n_tasks, noise=noise,
+                         rank=rank)
     mtype = jnp.asarray(np.asarray(machine_types, np.int32))
     return run_sim(workload.to_task_table(), mtype, tables,
-                   P.POLICY_IDS[policy], params, dynamics, policy_params)
+                   P.POLICY_IDS[policy], params, dynamics, policy_params,
+                   parents)
 
 
 def run_sweep(tasks: S.TaskTable, mtype: jnp.ndarray,
               tables: S.StaticTables, policy_ids: jnp.ndarray,
               params: SimParams = SimParams(),
               dynamics: S.MachineDynamics | None = None,
-              policy_params: NN.PolicyParams | None = None) -> S.SimState:
+              policy_params: NN.PolicyParams | None = None,
+              parents: jnp.ndarray | None = None) -> S.SimState:
     """vmap over leading replica axes of any/all array arguments.
 
     Arguments that should be shared across replicas must be broadcast by the
@@ -467,26 +571,12 @@ def run_sweep(tasks: S.TaskTable, mtype: jnp.ndarray,
     Monte-Carlo grid over failure rates / DVFS states is just another
     stacked input.  So does ``policy_params``: stacking perturbed weight
     pytrees along the replica axis evaluates a whole ES population in one
-    call (core/train_policy.py).
+    call (core/train_policy.py).  And so does ``parents`` ((R, N, K)):
+    a grid over workflow DAG shapes is one more stacked axis.  Optional
+    inputs left as ``None`` compile their feature out of every replica,
+    exactly as in ``run_sim`` (None is an empty pytree under vmap).
     """
-    if dynamics is None and policy_params is None:
-        def one(tasks, mtype, tables, pid):
-            return run_sim(tasks, mtype, tables, pid, params)
-        return jax.vmap(one)(tasks, mtype, tables, policy_ids)
-
-    if dynamics is None:
-        def one_pp(tasks, mtype, tables, pid, pp):
-            return run_sim(tasks, mtype, tables, pid, params,
-                           policy_params=pp)
-        return jax.vmap(one_pp)(tasks, mtype, tables, policy_ids,
-                                policy_params)
-
-    if policy_params is None:
-        def one_dyn(tasks, mtype, tables, pid, dyn):
-            return run_sim(tasks, mtype, tables, pid, params, dyn)
-        return jax.vmap(one_dyn)(tasks, mtype, tables, policy_ids, dynamics)
-
-    def one_full(tasks, mtype, tables, pid, dyn, pp):
-        return run_sim(tasks, mtype, tables, pid, params, dyn, pp)
-    return jax.vmap(one_full)(tasks, mtype, tables, policy_ids, dynamics,
-                              policy_params)
+    def one(tasks, mtype, tables, pid, dyn, pp, par):
+        return run_sim(tasks, mtype, tables, pid, params, dyn, pp, par)
+    return jax.vmap(one)(tasks, mtype, tables, policy_ids, dynamics,
+                         policy_params, parents)

@@ -59,6 +59,9 @@ class _Sim:
     # learned-policy weights (numpy float32 dict from neural.params_to_numpy;
     # None = the engine's zero default)
     policy_params: dict | None = None
+    # workflow mode (see engine._release / docs/workflows.md)
+    parents: np.ndarray | None = None        # (N, K) i32, -1 padded
+    rank: np.ndarray | None = None           # (N,) HEFT upward ranks
 
     status: np.ndarray = field(init=False)
     machine: np.ndarray = field(init=False)
@@ -87,6 +90,8 @@ class _Sim:
             self.kill = np.zeros(m, bool)
         if self.policy_params is None:
             self.policy_params = NN.params_to_numpy(None)
+        if self.rank is None:
+            self.rank = np.zeros(n, np.float64)
         self.n_preempts = np.zeros(n, np.int32)
         self.status = np.full(n, S.NOT_ARRIVED, np.int32)
         self.machine = np.full(n, -1, np.int32)
@@ -192,9 +197,47 @@ class _Sim:
                 self.machine[t] = -1
                 self.seq[t] = np.iinfo(np.int32).max
 
+    def _parents_of(self, t: int) -> list[int]:
+        if self.parents is None:
+            return []
+        return [int(p) for p in self.parents[t] if p >= 0]
+
+    def released(self, t: int) -> bool:
+        """All parents terminal (workflow mode; trivially true without)."""
+        return all(self.status[p] >= S.COMPLETED
+                   for p in self._parents_of(t))
+
+    def dep_failed(self, t: int) -> bool:
+        return any(self.status[p] >= S.COMPLETED
+                   and self.status[p] != S.COMPLETED
+                   for p in self._parents_of(t))
+
+    def release(self):
+        """Workflow phase (mirrors ``engine._release``): cancel tasks
+        whose precedence constraint can never be satisfied, cascading to
+        a fixpoint; cancels are emitted once, in task-id order, exactly
+        like the engine's status-diff record."""
+        if self.parents is None:
+            return
+        cancelled: list[int] = []
+        changed = True
+        while changed:
+            changed = False
+            for t in range(len(self.arrival)):
+                if self.status[t] != S.NOT_ARRIVED:
+                    continue
+                if self.released(t) and self.dep_failed(t):
+                    self.status[t] = S.CANCELLED
+                    self.t_end[t] = self.time
+                    cancelled.append(t)
+                    changed = True
+        for t in sorted(cancelled):
+            self.emit(TR.EV_CANCEL, t, -1)
+
     def arrivals(self):
         new = np.nonzero((self.status == S.NOT_ARRIVED)
                          & (self.arrival <= self.time))[0]
+        new = [t for t in new if self.released(t)]
         n_in_batch = int((self.status == S.IN_BATCH).sum())
         for k, t in enumerate(sorted(new)):
             if n_in_batch + k + 1 <= self.qcap:
@@ -301,6 +344,10 @@ class _Sim:
             t = min(q, key=lambda t: (self.deadline[t], t))
             m = min(rooms, key=lambda m: (avail[m] + self.expected(t, m), m))
             return t, m
+        if self.policy == "heft":
+            t = max(q, key=lambda t: (self.rank[t], -t))
+            m = min(rooms, key=lambda m: (avail[m] + self.expected(t, m), m))
+            return t, m
         raise ValueError(f"unknown policy {self.policy}")
 
     def drain(self):
@@ -343,7 +390,18 @@ class _Sim:
     # ---- loop ------------------------------------------------------------
     def next_event(self) -> float:
         cands = []
-        na = self.arrival[self.status == S.NOT_ARRIVED]
+        waiting = np.nonzero(self.status == S.NOT_ARRIVED)[0]
+        if self.parents is None:
+            na = self.arrival[waiting]
+        else:
+            # dependency-blocked tasks have no pending arrival event (a
+            # parent's terminal transition is already a candidate); a
+            # pending failure-release cascade fires at the current time
+            na = np.array([self.arrival[t] for t in waiting
+                           if self.released(t) and not self.dep_failed(t)])
+            if any(self.released(t) and self.dep_failed(t)
+                   for t in waiting):
+                cands.append(self.time)
         if na.size:
             cands.append(na.min())
         bu = self.busy_until[self.running >= 0]
@@ -364,7 +422,8 @@ class _Sim:
         n = len(self.arrival)
         budget = max_events or (4 * n + 16
                                 + 2 * self.down_start.shape[-1]
-                                * len(self.mtype))
+                                * len(self.mtype)
+                                + (n if self.parents is not None else 0))
         while not np.all(self.status >= S.COMPLETED) and budget > 0:
             t = self.next_event()
             if not np.isfinite(t):
@@ -372,6 +431,7 @@ class _Sim:
             self.time = t
             self.completions()
             self.availability()
+            self.release()
             self.arrivals()
             self.deadline_drops()
             self.drain()
@@ -391,7 +451,8 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                  speed=None, power_scale=None, down_start=None,
                  down_end=None, kill=None,
                  max_events=None, trace=False,
-                 policy_params=None) -> RefResult:
+                 policy_params=None, parents=None,
+                 rank=None) -> RefResult:
     """Oracle run.  The ``speed``/``power_scale``/``down_*``/``kill``
     kwargs mirror ``state.MachineDynamics`` (all default to the static
     fleet).  ``trace=True`` collects the ``(time, kind, task, machine)``
@@ -399,7 +460,10 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
     ``tests/test_trace.py`` asserts the two streams are identical.
     ``policy_params`` takes a ``neural.PolicyParams`` pytree (or the dict
     from ``neural.params_to_numpy``) for the learned ``mlp``/``linear``
-    policies; omitted = the engine's zero default."""
+    policies; omitted = the engine's zero default.  ``parents``/``rank``
+    mirror ``run_sim(parents=...)`` + ``StaticTables.rank`` (workflow
+    mode — pass the *same* float32 ranks the engine gets, so the ``heft``
+    orderings agree bit-for-bit)."""
     arrival = np.asarray(arrival, np.float64)
     if noise is None:
         noise = np.ones(len(arrival))
@@ -416,5 +480,8 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                down_start=_f64(down_start), down_end=_f64(down_end),
                kill=None if kill is None else np.asarray(kill, bool),
                trace=[] if trace else None,
-               policy_params=policy_params)
+               policy_params=policy_params,
+               parents=None if parents is None
+               else np.asarray(parents, np.int32),
+               rank=_f64(rank))
     return sim.run(max_events)

@@ -117,6 +117,61 @@ def metrics(st: S.SimState, tables: S.StaticTables,
     )
 
 
+def heterogeneity(eet: np.ndarray, mtype: np.ndarray,
+                  speed: np.ndarray | None = None) -> dict:
+    """HEET-style heterogeneity score of a machine fleet (after
+    *HEET: Accelerating Elastic Training in Heterogeneous Deep Learning
+    Clusters*, arXiv:2312.03235, which scores a cluster by how unevenly
+    performance is spread across it).
+
+    Two components, both in [0, ~1], combined multiplicatively:
+
+    * ``perf_cv`` — dispersion of per-machine capability: the
+      coefficient of variation (population std / mean) of
+      ``cap[m] = speed[m] * mean over task types of 1 / EET[t, mtype[m]]``
+      (mean throughput across the task mix, DVFS folded in);
+    * ``type_entropy`` — representation balance: the Shannon entropy of
+      the machine-type distribution, normalized by ``log(K)`` over the
+      ``K`` types present (0 for a single-type fleet, 1 when every
+      present type is equally common).
+
+    ``score = perf_cv * type_entropy``: 0 for a homogeneous fleet, and
+    it grows only when machines both *differ in speed* and *coexist in
+    balance* — a fleet of 15 GPUs and one straggler CPU is barely
+    heterogeneous in the sense that matters to a scheduler.
+    """
+    eet = np.asarray(eet, np.float64)
+    mtype = np.asarray(mtype, np.int64)
+    cap = (1.0 / eet).mean(axis=0)[mtype]
+    if speed is not None:
+        cap = cap * np.asarray(speed, np.float64)
+    mu = float(cap.mean())
+    perf_cv = float(cap.std() / mu) if mu > 0 else 0.0
+    counts = np.unique(mtype, return_counts=True)[1]
+    if counts.size > 1:
+        p = counts / counts.sum()
+        type_entropy = float(-(p * np.log(p)).sum() / np.log(counts.size))
+    else:
+        type_entropy = 0.0
+    return {"het_perf_cv": round(perf_cv, 6),
+            "het_type_entropy": round(type_entropy, 6),
+            "heterogeneity": round(perf_cv * type_entropy, 6)}
+
+
+def summarize(st: S.SimState, tables: S.StaticTables,
+              dynamics: S.MachineDynamics | None = None) -> dict:
+    """One flat dict for a finished replica: the ``SimReport`` metrics
+    row plus the fleet heterogeneity score (``heterogeneity``) — the
+    context line every workflow/scheduling result should be reported
+    with (how heterogeneous was the fleet this number was measured on?).
+    """
+    row = metrics(st, tables, dynamics).row()
+    row.update(heterogeneity(np.asarray(tables.eet),
+                             np.asarray(st.machines.mtype),
+                             np.asarray(st.machines.speed)))
+    return row
+
+
 def trace_table(trace_or_state) -> list[dict]:
     """Transition log from a trace (``simulate(..., trace=True)``): one
     row per lifecycle transition, in processing order — the headless

@@ -27,6 +27,8 @@ Batch policies (choose both task and machine from the whole batch queue):
   MINMIN  classic Min-Min (pair with minimum completion time)
   MAXMIN  classic Max-Min (task whose best completion is worst)
   EDF_MCT earliest-deadline-first task, min-completion machine
+  HEFT    highest-upward-rank task (workflow DAGs; ranks precomputed by
+          workload.upward_ranks), min-expected-finish machine
 
 Cancellation (the E2C "canceled tasks" pool) is a wrapper: when
 ``cancel_infeasible`` is on and even the *best* machine cannot meet the
@@ -67,6 +69,9 @@ class SchedView(NamedTuple):
     energy_nm: jnp.ndarray   # f32 (N, M) eet * active power
     head: jnp.ndarray        # i32 ()     FIFO head of batch queue (-1 empty)
     any_room: jnp.ndarray    # bool ()
+    rank: jnp.ndarray        # f32 (N,)   HEFT upward rank (StaticTables.rank;
+    #                          zeros on independent workloads, where `heft`
+    #                          degenerates to head-of-queue MCT)
 
     def completion_row(self, t) -> jnp.ndarray:
         """(M,) expected completion of task t on each machine."""
@@ -106,7 +111,7 @@ def build_view(state: S.SimState, tables: S.StaticTables,
     head = jnp.where(in_batch.any(),
                      jnp.argmax(in_batch), -1).astype(jnp.int32)
     return SchedView(in_batch, room, avail, eet_nm, energy_nm,
-                     head, room.any())
+                     head, room.any(), tables.rank)
 
 
 def _pick_machine(view: SchedView, scores: jnp.ndarray) -> jnp.ndarray:
@@ -205,6 +210,22 @@ def maxmin(state, tables, view: SchedView, rr_ptr, params) -> Decision:
                     jnp.bool_(False))
 
 
+def heft(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+    """HEFT-style list scheduling (Topcuoglu et al.): pick the queued task
+    with the highest *upward rank* (critical-path length from the task to
+    a DAG exit, precomputed host-side by ``workload.upward_ranks`` and
+    threaded in through ``StaticTables.rank``), then map it to the
+    machine with the earliest expected finish time.  On independent
+    workloads every rank is zero, so the policy degenerates to
+    head-of-queue + min completion (MCT)."""
+    score = jnp.where(view.in_batch, view.rank, -BIG)
+    t = jnp.argmax(score).astype(jnp.int32)
+    ok = view.in_batch.any() & view.any_room
+    m = _pick_machine(view, view.completion_row(t))
+    return Decision(jnp.where(ok, t, -1).astype(jnp.int32),
+                    jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
+
+
 def edf_mct(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     dl = jnp.where(view.in_batch, state.tasks.deadline, BIG)
     t = jnp.argmin(dl).astype(jnp.int32)
@@ -227,10 +248,11 @@ SCHEDULERS: dict[str, PolicyFn] = {
     "minmin": minmin,
     "maxmin": maxmin,
     "edf_mct": edf_mct,
+    "heft": heft,
 }
 POLICY_NAMES = list(SCHEDULERS)
 POLICY_IDS = {n: i for i, n in enumerate(POLICY_NAMES)}
-BATCH_POLICIES = {"minmin", "maxmin", "edf_mct"}
+BATCH_POLICIES = {"minmin", "maxmin", "edf_mct", "heft"}
 
 
 def register_policy(name: str, fn: PolicyFn) -> int:

@@ -150,6 +150,13 @@ class SimState:
     trace: Any = None         # trace.TraceBuffer when SimParams.trace is
     #                           on, else None (tracing compiles out; the
     #                           engine gates recording on a Python check)
+    deps_left: Any = None     # i32 (N,) remaining unfinished parents per
+    #                           task (workflow mode; None = independent
+    #                           tasks, which compiles the pre-DAG HLO —
+    #                           gated on a Python-level None check like
+    #                           `trace`).  Maintained by the engine's
+    #                           dependency-release phase; a task may only
+    #                           arrive once its counter reaches zero.
 
 
 @register_pytree
@@ -160,10 +167,35 @@ class StaticTables:
     eet: jnp.ndarray        # f32 (T_types, M_types) expected execution times
     power: jnp.ndarray      # f32 (M_types, 2) [idle_W, active_W]
     noise: jnp.ndarray      # f32 (N,) multiplicative actual/expected exec time
+    rank: jnp.ndarray       # f32 (N,) HEFT upward rank per task (zeros for
+    #                         independent workloads; precomputed host-side
+    #                         by workload.upward_ranks and consumed by the
+    #                         `heft` policy through SchedView.rank)
+
+
+def dep_state(status: jnp.ndarray, parents: jnp.ndarray
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-task dependency summary from the current status column.
+
+    ``parents`` is the fixed-width (N, K) parent table, padded with -1.
+    Returns ``(left, failed)``: ``left[i]`` counts parents of ``i`` not
+    yet in a terminal state (the remaining-parents counter), and
+    ``failed[i]`` is True when some parent terminated without completing
+    (cancelled / missed / preempted) — such a task can never run and is
+    cancelled by the engine's release phase.
+    """
+    n = status.shape[0]
+    valid = parents >= 0
+    ps = status[jnp.clip(parents, 0, n - 1)]          # (N, K)
+    term = valid & (ps >= COMPLETED)
+    left = jnp.sum(valid & ~term, axis=1).astype(jnp.int32)
+    failed = jnp.any(term & (ps != COMPLETED), axis=1)
+    return left, failed
 
 
 def init_state(tasks: TaskTable, mtype: jnp.ndarray,
-               dynamics: MachineDynamics | None = None) -> SimState:
+               dynamics: MachineDynamics | None = None,
+               parents: jnp.ndarray | None = None) -> SimState:
     n = tasks.arrival.shape[0]
     m = mtype.shape[0]
     if dynamics is None:
@@ -191,6 +223,9 @@ def init_state(tasks: TaskTable, mtype: jnp.ndarray,
         t_start=jnp.full((n,), -1.0, jnp.float32),
         t_end=jnp.full((n,), -1.0, jnp.float32),
     )
+    deps_left = None
+    if parents is not None:
+        deps_left = jnp.sum(parents >= 0, axis=1).astype(jnp.int32)
     return SimState(
         time=jnp.float32(0.0),
         tasks=tasks,
@@ -200,6 +235,7 @@ def init_state(tasks: TaskTable, mtype: jnp.ndarray,
         n_events=jnp.int32(0),
         n_preempts=jnp.zeros((n,), jnp.int32),
         mq_count=jnp.zeros((m,), jnp.int32),
+        deps_left=deps_left,
     )
 
 

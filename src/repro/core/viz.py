@@ -11,7 +11,9 @@ Charts (each returns an SVG string; ``save`` writes it):
 
 * ``gantt``        per-machine execution segments, colored by outcome;
                    a preempted-and-requeued task shows as a split bar,
-                   down intervals as shaded spans.
+                   down intervals as shaded spans.  Workflow mode draws
+                   one arrow per dependency edge and overlays the
+                   realized critical path (docs/workflows.md).
 * ``utilization``  fleet busy-fraction over time (step curve).
 * ``queue_depth``  batch-queue depth + total machine-queue depth.
 * ``energy_over_time``  cumulative active energy.
@@ -209,7 +211,8 @@ def _span(tb: T.TraceBuffer, n_events: int | None) -> float:
 # Gantt
 # --------------------------------------------------------------------------
 def gantt(trace_or_state, dynamics=None, width: int = 960,
-          row_h: int = 22, title: str = "Schedule (Gantt)") -> str:
+          row_h: int = 22, title: str = "Schedule (Gantt)",
+          workflow=None, critical_path: bool = True) -> str:
     """Per-machine execution timeline, one bar per execution segment.
 
     Segment color encodes the outcome (see legend); a task evicted by a
@@ -217,6 +220,14 @@ def gantt(trace_or_state, dynamics=None, width: int = 960,
     "requeued" slice is the work that was lost.  Pass the scenario
     ``dynamics`` (``state.MachineDynamics`` or ``workload.Scenario``) to
     shade each machine's down intervals.
+
+    Pass ``workflow`` (a ``workload.Workflow`` or a raw ``(N, K)``
+    parent table) to draw the DAG: one arrow per dependency edge, from
+    the parent's last execution segment to the child's first.  With
+    ``critical_path=True`` the realized critical path — the chain of
+    dependencies ending at the last task to finish, following the
+    latest-finishing parent at each hop — is overlaid: its bars are
+    outlined and its arrows drawn bold (docs/workflows.md).
     """
     tb, n_events = _resolve(trace_or_state)
     segs = T.segments(tb)
@@ -268,11 +279,81 @@ def gantt(trace_or_state, dynamics=None, width: int = 960,
             f'<title>task {s["task"]} on m{s["machine"]}: '
             f'{s["t0"]:.2f}-{s["t1"]:.2f}s ({label})</title></rect>')
 
+    # dependency arrows + realized-critical-path overlay (workflow mode)
+    parents = getattr(workflow, "parents", workflow)
+    on_path: set[int] = set()
+    if parents is not None:
+        parents = np.asarray(parents, int)
+        first_seg: dict[int, dict] = {}
+        last_seg: dict[int, dict] = {}
+        for s in segs:
+            t = s["task"]
+            if t not in first_seg or s["t0"] < first_seg[t]["t0"]:
+                first_seg[t] = s
+            if t not in last_seg or s["t1"] > last_seg[t]["t1"]:
+                last_seg[t] = s
+        if critical_path and last_seg:
+            # walk back from the last task to finish, through the
+            # latest-finishing parent at each hop
+            t = max(last_seg, key=lambda k: (last_seg[k]["t1"], -k))
+            chain = [t]
+            while True:
+                ps = [int(p) for p in parents[chain[-1]]
+                      if p >= 0 and int(p) in last_seg]
+                if not ps:
+                    break
+                chain.append(max(ps, key=lambda p: (last_seg[p]["t1"],
+                                                    -p)))
+            on_path = set(chain)
+        fr.parts.append(
+            '<defs><marker id="dep-arrow" viewBox="0 0 8 8" refX="7" '
+            'refY="4" markerWidth="6" markerHeight="6" orient="auto">'
+            f'<path d="M0,0 L8,4 L0,8 z" fill="{INK_2}"/></marker>'
+            '<marker id="cp-arrow" viewBox="0 0 8 8" refX="7" refY="4" '
+            'markerWidth="6" markerHeight="6" orient="auto">'
+            f'<path d="M0,0 L8,4 L0,8 z" fill="{SERIES_2}"/></marker>'
+            '</defs>')
+        for c in range(parents.shape[0]):
+            if c not in first_seg:
+                continue
+            cs = first_seg[c]
+            for p in parents[c]:
+                p = int(p)
+                if p < 0 or p not in last_seg:
+                    continue
+                ps = last_seg[p]
+                cp = (p in on_path) and (c in on_path)
+                x0 = float(fr.sx(ps["t1"]))
+                y0 = lane_y(ps["machine"]) + row_h / 2
+                x1 = float(fr.sx(cs["t0"]))
+                y1 = lane_y(cs["machine"]) + row_h / 2
+                color = SERIES_2 if cp else INK_2
+                w = 1.8 if cp else 1.0
+                op = 0.95 if cp else 0.55
+                marker = "cp-arrow" if cp else "dep-arrow"
+                fr.parts.append(
+                    f'<line x1="{x0:.1f}" y1="{y0:.1f}" x2="{x1:.1f}" '
+                    f'y2="{y1:.1f}" stroke="{color}" stroke-width="{w}" '
+                    f'stroke-opacity="{op}" '
+                    f'marker-end="url(#{marker})">'
+                    f'<title>task {p} &#8594; task {c}</title></line>')
+        for t in on_path:          # outline the critical path's bars
+            for s in (first_seg[t], last_seg[t]):
+                x0, x1 = float(fr.sx(s["t0"])), float(fr.sx(s["t1"]))
+                y = lane_y(s["machine"]) + (row_h - bar_h) / 2
+                fr.parts.append(
+                    f'<rect x="{x0:.1f}" y="{y:.1f}" '
+                    f'width="{max(x1 - x0 - 0.5, 1.0):.1f}" '
+                    f'height="{bar_h}" rx="2" fill="none" '
+                    f'stroke="{SERIES_2}" stroke-width="1.6"/>')
+
     entries = [(OUTCOME_LABELS[k], OUTCOME_COLORS[k])
                for k in (T.EV_COMPLETE, T.EV_REQUEUE, T.EV_PREEMPT,
                          T.EV_MISS_RUNNING)]
     if dyn is not None:
         entries.append(("down", DOWN_FILL))
+    if parents is not None and on_path:
+        entries.append(("critical path", SERIES_2))
     fr.legend(entries)
     return fr.render()
 
@@ -443,15 +524,17 @@ def policy_scoreboard(rows: Sequence[dict],
 # --------------------------------------------------------------------------
 def html_report(trace_or_state, dynamics=None,
                 title: str = "E2C simulation report",
-                scoreboard: Sequence[dict] | None = None) -> str:
+                scoreboard: Sequence[dict] | None = None,
+                workflow=None) -> str:
     """One standalone HTML page with all four charts inline.
 
     ``scoreboard`` (optional): policy-comparison rows (the rows element
     of ``launch.learn.scoreboard(...)``) — appends a
-    ``policy_scoreboard`` chart.
+    ``policy_scoreboard`` chart.  ``workflow`` (optional): parent table
+    for dependency arrows on the Gantt (see ``gantt``).
     """
     charts = [
-        gantt(trace_or_state, dynamics=dynamics),
+        gantt(trace_or_state, dynamics=dynamics, workflow=workflow),
         utilization(trace_or_state),
         queue_depth(trace_or_state),
         energy_over_time(trace_or_state),

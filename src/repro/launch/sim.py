@@ -28,8 +28,8 @@ from repro.core import engine as E
 from repro.core import schedulers as P
 from repro.core import state as S
 from repro.core.eet import EETTable, synth_eet
-from repro.core.workload import (ARRIVAL_GENERATORS, make_scenario,
-                                 poisson_workload)
+from repro.core.workload import (ARRIVAL_GENERATORS, WORKFLOW_GENERATORS,
+                                 make_scenario, poisson_workload)
 
 
 def summarize_replica(st: S.SimState, tables: S.StaticTables,
@@ -70,7 +70,7 @@ def summarize_replica(st: S.SimState, tables: S.StaticTables,
 
 def build_sim_sweep(n_tasks: int, n_machines: int,
                     params: E.SimParams = E.SimParams(),
-                    learned: bool = False):
+                    learned: bool = False, workflow: bool = False):
     """-> f(task_table[R], mtype[R,M], tables[R], policy[R]) -> metrics[R].
 
     With ``learned=True`` the sweep takes one extra ``policy_params``
@@ -78,6 +78,11 @@ def build_sim_sweep(n_tasks: int, n_machines: int,
     ``None``) — the shape used to evaluate one trained policy against a
     replica grid.  For a *population* of parameter vectors (ES training)
     vmap the params axis instead — see ``core/train_policy.py``.
+
+    With ``workflow=True`` the sweep takes one extra stacked ``parents``
+    input ((R, N, K) int32, -1 padded) — the DAG axis; each replica's
+    precedence constraints Monte-Carlo like any other axis
+    (docs/workflows.md).
     """
     if learned:
         def one_pp(tasks, mtype, tables, policy_id, policy_params):
@@ -85,6 +90,13 @@ def build_sim_sweep(n_tasks: int, n_machines: int,
                            policy_params=policy_params)
             return summarize_replica(st, tables)
         return jax.vmap(one_pp, in_axes=(0, 0, 0, 0, None))
+
+    if workflow:
+        def one_wf(tasks, mtype, tables, policy_id, parents):
+            st = E.run_sim(tasks, mtype, tables, policy_id, params,
+                           parents=parents)
+            return summarize_replica(st, tables)
+        return jax.vmap(one_wf)
 
     def one(tasks, mtype, tables, policy_id):
         st = E.run_sim(tasks, mtype, tables, policy_id, params)
@@ -95,7 +107,7 @@ def build_sim_sweep(n_tasks: int, n_machines: int,
 
 def build_scenario_sweep(n_tasks: int, n_machines: int,
                          params: E.SimParams = E.SimParams(),
-                         learned: bool = False):
+                         learned: bool = False, workflow: bool = False):
     """Scenario-axis sweep: like ``build_sim_sweep`` plus a stacked
     ``MachineDynamics`` input, so a Monte-Carlo grid over failure rates /
     spot semantics / DVFS states shards like any other replica axis.
@@ -104,8 +116,18 @@ def build_scenario_sweep(n_tasks: int, n_machines: int,
        -> metrics[R]
 
     ``learned=True`` appends a shared ``policy_params`` argument exactly
-    like ``build_sim_sweep``.
+    like ``build_sim_sweep``.  ``workflow=True`` appends a stacked
+    ``parents[R]`` DAG input ((R, N, K) int32, -1 padded) — the sweep
+    shape behind ``make_workflow_replicas`` (docs/workflows.md).
     """
+    if learned and workflow:
+        def one_full(tasks, mtype, tables, policy_id, dynamics, parents,
+                     policy_params):
+            st = E.run_sim(tasks, mtype, tables, policy_id, params,
+                           dynamics, policy_params, parents)
+            return summarize_replica(st, tables, dynamics)
+        return jax.vmap(one_full, in_axes=(0, 0, 0, 0, 0, 0, None))
+
     if learned:
         def one_pp(tasks, mtype, tables, policy_id, dynamics,
                    policy_params):
@@ -113,6 +135,13 @@ def build_scenario_sweep(n_tasks: int, n_machines: int,
                            dynamics, policy_params)
             return summarize_replica(st, tables, dynamics)
         return jax.vmap(one_pp, in_axes=(0, 0, 0, 0, 0, None))
+
+    if workflow:
+        def one_wf(tasks, mtype, tables, policy_id, dynamics, parents):
+            st = E.run_sim(tasks, mtype, tables, policy_id, params,
+                           dynamics, parents=parents)
+            return summarize_replica(st, tables, dynamics)
+        return jax.vmap(one_wf)
 
     def one(tasks, mtype, tables, policy_id, dynamics):
         st = E.run_sim(tasks, mtype, tables, policy_id, params, dynamics)
@@ -151,13 +180,16 @@ def trace_replica(inputs: tuple, i: int,
     run the (traceless, fast) sweep, pick the replica you care about
     from its metrics, then re-simulate just that one with ``trace=True``
     and hand the returned state to ``core/viz.py``.  ``inputs`` is the
-    4-tuple from ``make_replicas`` or the 5-tuple (with dynamics) from
-    ``make_scenario_replicas``.
+    4-tuple from ``make_replicas``, the 5-tuple (with dynamics) from
+    ``make_scenario_replicas``, or the 6-tuple (with dynamics + parents)
+    from ``make_workflow_replicas``.
     """
     rep = jax.tree.map(lambda x: jnp.asarray(x)[i], tuple(inputs))
     dyn = rep[4] if len(rep) > 4 else None
+    par = rep[5] if len(rep) > 5 else None
     params = params._replace(trace=trace)
-    return E.run_sim(rep[0], rep[1], rep[2], rep[3], params, dyn)
+    return E.run_sim(rep[0], rep[1], rep[2], rep[3], params, dyn,
+                     parents=par)
 
 
 _SWEEP_CACHE: dict = {}
@@ -338,6 +370,79 @@ def make_scenario_replicas(n_replicas: int, n_tasks: int, n_machines: int,
             stack(tabs), jnp.asarray(pids, jnp.int32), stack(dyns))
 
 
+def make_workflow_replicas(n_replicas: int, n_tasks: int, n_machines: int,
+                           n_task_types: int = 4, n_machine_types: int = 4,
+                           *, policies: list[str] | None = None,
+                           shapes: tuple[str, ...] = ("chain", "fork_join",
+                                                      "layered"),
+                           fail_rates: list[float] | None = None,
+                           dvfs_states: list[str] | None = None,
+                           spot_frac: float = 0.0, mttr: float = 4.0,
+                           n_intervals: int = 4, seed: int = 0) -> tuple:
+    """Host-side workflow grid: (policy x DAG shape [x failure x DVFS])
+    cells, one replica each, stacked for one jitted
+    ``build_scenario_sweep(workflow=True)`` call.
+
+    ``shapes`` names ``workload.WORKFLOW_GENERATORS`` entries; parent
+    tables are padded to the grid's widest in-degree so the DAG axis
+    stacks like every other replica axis.  HEFT upward ranks are
+    precomputed per replica into ``StaticTables.rank``.
+
+    Unlike ``make_scenario_replicas``, the policy axis is *paired*: the
+    ``len(policies)`` consecutive replicas of a cell share the same DAG,
+    EET draw, fleet, noise and failure trace, so per-policy aggregates
+    are an apples-to-apples comparison (HEFT vs the rest on identical
+    instances).
+
+    Returns ``(task_tables, mtypes, tables, policy_ids, dynamics,
+    parents)`` with a leading replica axis on every leaf.
+    """
+    policies = policies or ["heft", "mct", "rr"]
+    fail_rates = fail_rates if fail_rates is not None else [0.0]
+    dvfs_states = dvfs_states or ["nominal"]
+    n_p, n_s, n_f = len(policies), len(shapes), len(fail_rates)
+    tts, mts, tabs, pids, dyns, pars = [], [], [], [], [], []
+    for cell in range((n_replicas + n_p - 1) // n_p):
+        crng = np.random.default_rng(seed + 104729 * cell)
+        eet = synth_eet(n_task_types, n_machine_types,
+                        inconsistency=0.3, seed=seed + cell)
+        power = np.stack([
+            crng.uniform(20, 60, n_machine_types),
+            crng.uniform(80, 300, n_machine_types)], axis=1)
+        gen = WORKFLOW_GENERATORS[shapes[cell % n_s]]
+        wf = gen(n_tasks, n_task_types, eet.eet.mean(1),
+                 seed + 7919 * cell)
+        scen = make_scenario(
+            wf.workload, n_machines,
+            fail_rate=fail_rates[(cell // n_s) % n_f],
+            mttr=mttr, spot=(crng.random() < spot_frac),
+            dvfs=dvfs_states[(cell // (n_s * n_f)) % len(dvfs_states)],
+            n_intervals=n_intervals, seed=seed + 31 * cell)
+        noise = crng.lognormal(0.0, 0.1, n_tasks).astype(np.float32)
+        tt = wf.workload.to_task_table()
+        mt = crng.integers(0, n_machine_types, n_machines)
+        tab = E.make_tables(eet, power.astype(np.float32), n_tasks,
+                            noise=noise, rank=wf.ranks(eet.eet.mean(1)))
+        dyn = scen.dynamics()
+        # one instance per cell, repeated for each paired policy
+        for p in range(min(n_p, n_replicas - cell * n_p)):
+            tts.append(tt)
+            mts.append(mt)
+            tabs.append(tab)
+            pids.append(P.POLICY_IDS[policies[p]])
+            dyns.append(dyn)
+            pars.append(wf.parents)
+    k_max = max(p.shape[1] for p in pars)
+    parents = np.full((n_replicas, n_tasks, k_max), -1, np.int32)
+    for r, p in enumerate(pars):
+        parents[r, :, :p.shape[1]] = p
+    stack = lambda trees: jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees)
+    return (stack(tts), jnp.asarray(np.stack(mts), jnp.int32),
+            stack(tabs), jnp.asarray(pids, jnp.int32), stack(dyns),
+            jnp.asarray(parents))
+
+
 @dataclass
 class SimSweepArtifacts:
     jitted: Any
@@ -386,6 +491,7 @@ def build_sharded_sweep(mesh, n_replicas: int, n_tasks: int,
             power=jax.ShapeDtypeStruct(
                 (n_replicas, n_machine_types, 2), jnp.float32),
             noise=jax.ShapeDtypeStruct((n_replicas, n_tasks), jnp.float32),
+            rank=jax.ShapeDtypeStruct((n_replicas, n_tasks), jnp.float32),
         )
         inputs = (tt,
                   jax.ShapeDtypeStruct((n_replicas, n_machines), jnp.int32),

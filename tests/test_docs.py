@@ -76,25 +76,48 @@ def test_docs_page_references_resolve():
     assert not dangling, "dangling docs/ references:\n" + "\n".join(dangling)
 
 
+def _md_links(path: Path) -> list[tuple[str, Path]]:
+    """(raw target, resolved path) for every relative ``[text](target)``
+    link in a markdown file (anchors stripped; URLs skipped)."""
+    links = []
+    for m in re.finditer(r"\]\(([^)\s]+)\)", path.read_text()):
+        target = m.group(1).split("#")[0]
+        if (not target or target.startswith(("http://", "https://",
+                                             "mailto:"))):
+            continue
+        links.append((m.group(1), (path.parent / target).resolve()))
+    return links
+
+
 def test_relative_markdown_links_resolve():
-    """Every relative ``[text](target)`` link in committed markdown must
-    point at an existing file (anchors stripped; URLs skipped)."""
+    """Every relative markdown link must point at an existing file."""
     dangling = []
     md_files = [p for p in _source_files() if p.suffix == ".md"]
     for path in md_files:
-        for m in re.finditer(r"\]\(([^)\s]+)\)", path.read_text()):
-            target = m.group(1).split("#")[0]
-            if (not target or target.startswith(("http://", "https://",
-                                                 "mailto:"))):
-                continue
-            resolved = (path.parent / target).resolve()
+        for raw, resolved in _md_links(path):
             if not resolved.exists():
-                dangling.append(f"{path.relative_to(REPO)}: {m.group(1)}")
+                dangling.append(f"{path.relative_to(REPO)}: {raw}")
     assert not dangling, "dangling markdown links:\n" + "\n".join(dangling)
 
 
 def test_required_docs_pages_exist():
     """The documentation layer this repo promises (README links these)."""
-    for page in ("docs/architecture.md", "docs/visualization.md",
-                 "docs/scenarios.md", "docs/adding_a_scheduler.md"):
+    for page in ("docs/index.md", "docs/architecture.md",
+                 "docs/visualization.md", "docs/scenarios.md",
+                 "docs/adding_a_scheduler.md", "docs/workflows.md",
+                 "docs/learned_scheduling.md"):
         assert (REPO / page).exists(), f"missing {page}"
+
+
+def test_docs_index_reaches_every_page():
+    """docs/index.md is the landing page: every docs/*.md guide must be
+    linked from it (no orphans), and the README must point at it."""
+    index = REPO / "docs" / "index.md"
+    assert index.exists(), "missing docs/index.md"
+    linked = {resolved for _, resolved in _md_links(index)}
+    orphans = [p.name for p in sorted((REPO / "docs").glob("*.md"))
+               if p.name != "index.md" and p.resolve() not in linked]
+    assert not orphans, \
+        "docs pages not linked from docs/index.md: " + ", ".join(orphans)
+    assert "docs/index.md" in (REPO / "README.md").read_text(), \
+        "README.md must link the docs landing page (docs/index.md)"

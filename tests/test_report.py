@@ -70,3 +70,44 @@ def test_task_table_rows():
     rows = R.task_table(stt)
     assert len(rows) == wl.n_tasks
     assert all(r["status"] in R.STATUS_NAMES.values() for r in rows)
+
+
+def test_heterogeneity_closed_form():
+    """Hand-built 2-machine fleet: one task type with EET [1, 2] on the
+    two machine types -> capabilities [1.0, 0.5], mean 0.75, population
+    std 0.25, so perf_cv = 1/3; types split 50/50 -> entropy 1.0; the
+    HEET-style score is their product, 1/3."""
+    het = R.heterogeneity(np.array([[1.0, 2.0]]), np.array([0, 1]))
+    np.testing.assert_allclose(het["het_perf_cv"], 1.0 / 3.0, atol=1e-6)
+    np.testing.assert_allclose(het["het_type_entropy"], 1.0, atol=1e-6)
+    np.testing.assert_allclose(het["heterogeneity"], 1.0 / 3.0, atol=1e-6)
+
+
+def test_heterogeneity_homogeneous_fleet_is_zero():
+    het = R.heterogeneity(np.array([[1.0, 2.0]]), np.array([0, 0, 0]))
+    assert het["heterogeneity"] == 0.0
+    assert het["het_type_entropy"] == 0.0
+
+
+def test_heterogeneity_dvfs_speed_folds_in():
+    """Equal types but a 2x DVFS split still shows performance
+    dispersion (entropy gates it to zero — a single-type fleet is not
+    heterogeneous in the scheduling sense), while a speed split across
+    *types* raises the score."""
+    het = R.heterogeneity(np.array([[1.0, 1.0]]), np.array([0, 1]),
+                          speed=np.array([1.0, 2.0]))
+    np.testing.assert_allclose(het["het_perf_cv"], 1.0 / 3.0, atol=1e-6)
+    np.testing.assert_allclose(het["heterogeneity"], 1.0 / 3.0, atol=1e-6)
+
+
+def test_summarize_reports_heterogeneity():
+    stt, tables, wl = run()           # mtype [0, 1, 0], heterogeneous EET
+    row = R.summarize(stt, tables)
+    assert {"completed", "makespan", "energy_J", "heterogeneity",
+            "het_perf_cv", "het_type_entropy"} <= set(row)
+    assert row["het_type_entropy"] > 0.0
+    # matches the standalone computation on the same fleet
+    het = R.heterogeneity(np.asarray(tables.eet),
+                          np.asarray(stt.machines.mtype),
+                          np.asarray(stt.machines.speed))
+    assert row["heterogeneity"] == het["heterogeneity"]
