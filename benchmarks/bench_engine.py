@@ -7,7 +7,14 @@ the vectorized engine makes *simulated* studies cheap at scale:
   T1. one jit'd replica beats the plain-Python reference engine;
   T2. vmapped replicas amortize: events/sec grows ~linearly with the
       replica count until the host saturates (on TPU this axis is then
-      sharded over the pod — launch/sim.py).
+      sharded over the pod — launch/experiment.py);
+  ...
+  T8. the ExperimentSpec executable cache works: building + running a
+      SECOND same-shape spec skips retracing entirely and is >= 5x
+      faster than the first (docs/experiments.md).
+
+All rows run through the declarative spec pipeline (one cached
+executable per SimParams) — the same path users take.
 """
 from __future__ import annotations
 
@@ -21,36 +28,40 @@ from benchmarks.common import md_table, save_result
 from repro.core import engine as E
 from repro.core import ref_engine as RE
 from repro.core import schedulers as P
-from repro.launch.sim import (build_scenario_sweep, build_sim_sweep,
-                              build_traced_sweep, make_replicas,
-                              make_scenario_replicas,
-                              make_workflow_replicas, run_grouped_sweep)
+from repro.launch import experiment as XP
+from repro.launch.sim import make_replicas, run_grouped_sweep
 
 N_TASKS, N_MACHINES = 128, 16
+
+SCEN_AXIS = XP.ScenarioAxis((0.0, 0.05, 0.2), ("nominal", "powersave"),
+                            spot_frac=0.5)
+
+
+def _time_fn(fn, args, ready=lambda out: out["completed"]):
+    out = fn(*args)                            # compile + warm
+    jax.block_until_ready(ready(out))
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(ready(out))
+    return time.perf_counter() - t0
 
 
 def time_sweep(n_replicas: int) -> tuple[float, float]:
     inputs = make_replicas(n_replicas, N_TASKS, N_MACHINES, seed=0)
-    sweep = jax.jit(build_sim_sweep(N_TASKS, N_MACHINES))
-    out = sweep(*inputs)                       # compile + warm
-    jax.block_until_ready(out["completed"])
-    t0 = time.perf_counter()
-    out = sweep(*inputs)
-    jax.block_until_ready(out["completed"])
-    dt = time.perf_counter() - t0
+    sweep = XP.compile_sweep()
+    dt = _time_fn(sweep, inputs + (None, None, None))
     return dt, dt / n_replicas
 
 
 def time_scenario_sweep(n_replicas: int) -> tuple[float, float]:
     """Dynamic-scenario replicas (failure traces + DVFS + preemption)."""
-    inputs = make_scenario_replicas(n_replicas, N_TASKS, N_MACHINES, seed=0)
-    sweep = jax.jit(build_scenario_sweep(N_TASKS, N_MACHINES))
-    out = sweep(*inputs)                       # compile + warm
-    jax.block_until_ready(out["completed"])
-    t0 = time.perf_counter()
-    out = sweep(*inputs)
-    jax.block_until_ready(out["completed"])
-    dt = time.perf_counter() - t0
+    spec = XP.ExperimentSpec(
+        n_replicas, XP.FleetAxis(N_MACHINES), XP.WorkloadAxis(N_TASKS),
+        scenario=SCEN_AXIS,
+        policy=XP.PolicyAxis(("mct", "minmin", "ee_mct")), seed=0)
+    reps = XP.normalize(spec)
+    sweep = XP.compile_experiment(spec)
+    dt = _time_fn(sweep, reps.legacy() + (None, None))
     return dt, dt / n_replicas
 
 
@@ -58,14 +69,39 @@ def time_traced_sweep(n_replicas: int) -> tuple[float, float]:
     """Replicas with in-jit trace capture on (EXPERIMENTS.md §Perf —
     the measured cost of the masked trace writes + snapshots)."""
     inputs = make_replicas(n_replicas, N_TASKS, N_MACHINES, seed=0)
-    sweep = jax.jit(build_traced_sweep(N_TASKS, N_MACHINES))
-    out, _ = sweep(*inputs)                    # compile + warm
-    jax.block_until_ready(out["completed"])
-    t0 = time.perf_counter()
-    out, traces = sweep(*inputs)
-    jax.block_until_ready(traces.n_rows)
-    dt = time.perf_counter() - t0
+    sweep = XP.compile_sweep(E.SimParams(trace=True))
+    dt = _time_fn(sweep, inputs + (None, None, None),
+                  ready=lambda out: out[1].n_rows)
     return dt, dt / n_replicas
+
+
+def time_experiment_cache(n_replicas: int) -> tuple[float, float, dict]:
+    """T8: end-to-end (build + normalize + run) of two same-shape specs.
+
+    The first spec pays compilation; the second (new seed, same shapes)
+    must hit the executable cache AND jax's trace cache — no retracing.
+    A dedicated SimParams (max_events pinned) keeps this row's cache
+    entry disjoint from the other rows, so the first run really
+    compiles.
+    """
+    params = E.SimParams(max_events=4 * N_TASKS + 17)
+
+    def build_and_run(seed: int) -> float:
+        spec = XP.ExperimentSpec(
+            n_replicas, XP.FleetAxis(N_MACHINES),
+            XP.WorkloadAxis(N_TASKS), scenario=SCEN_AXIS,
+            policy=XP.PolicyAxis(("mct", "minmin", "ee_mct")),
+            sim=params, seed=seed)
+        t0 = time.perf_counter()
+        res = XP.run_experiment(spec)
+        jax.block_until_ready(res.metrics["completed"])
+        return time.perf_counter() - t0
+
+    stats0 = XP.cache_stats()
+    t_first = build_and_run(0)
+    t_second = build_and_run(1)
+    stats = {k: XP.cache_stats()[k] - stats0[k] for k in ("hits", "misses")}
+    return t_first, t_second, stats
 
 
 def time_learned_dispatch(n_replicas: int) -> tuple[float, float]:
@@ -106,27 +142,21 @@ def time_workflow_sweep(n_replicas: int) -> tuple[float, float, float]:
     * ``plain``   — the same independent workload with ``parents=None``
       (the pre-DAG engine, T7's baseline).
     """
-    wf_in = make_workflow_replicas(n_replicas, N_TASKS, N_MACHINES,
-                                   shapes=("chain",), policies=["mct"],
-                                   seed=0)
-    chain_inputs = wf_in[:4] + (wf_in[5],)
-    dag_sweep = jax.jit(build_sim_sweep(N_TASKS, N_MACHINES,
-                                        workflow=True))
+    wf_spec = XP.ExperimentSpec(
+        n_replicas, XP.FleetAxis(N_MACHINES),
+        XP.WorkloadAxis(N_TASKS, shapes=("chain",)),
+        policy=XP.PolicyAxis(("mct",)), seed=0)
+    wf = XP.normalize(wf_spec)
+    sweep = XP.compile_sweep()
     base = make_replicas(n_replicas, N_TASKS, N_MACHINES,
                          policies=["mct"], seed=0)
-    inert_inputs = base + (jnp.full((n_replicas, N_TASKS, 1), -1,
-                                    jnp.int32),)
-    plain_sweep = jax.jit(build_sim_sweep(N_TASKS, N_MACHINES))
+    inert_parents = jnp.full((n_replicas, N_TASKS, 1), -1, jnp.int32)
     times = []
-    for fn, inputs in ((dag_sweep, chain_inputs),
-                       (dag_sweep, inert_inputs),
-                       (plain_sweep, base)):
-        out = fn(*inputs)                      # compile + warm
-        jax.block_until_ready(out["completed"])
-        t0 = time.perf_counter()
-        out = fn(*inputs)
-        jax.block_until_ready(out["completed"])
-        times.append((time.perf_counter() - t0) / n_replicas)
+    for args in ((wf.tasks, wf.mtype, wf.tables, wf.policy_ids, None,
+                  wf.parents, None),
+                 base + (None, inert_parents, None),
+                 base + (None, None, None)):
+        times.append(_time_fn(sweep, args) / n_replicas)
     return times[0], times[1], times[2]        # (chain, inert, plain)
 
 
@@ -211,6 +241,19 @@ def run(out_dir=None, smoke: bool = False) -> dict:
                  "per_replica_ms": round(mlp_per * 1e3, 3),
                  "replicas_per_s": round(1 / mlp_per, 1)})
 
+    # ExperimentSpec executable cache: build+run a spec twice (new seed,
+    # same shapes) — the second must skip retracing entirely (T8).
+    # Fixed small replica count: the check isolates compile-vs-cached
+    # dispatch, so execution time must not drown the compile term.
+    cache_n = 8
+    cache_first, cache_second, cache_stats = time_experiment_cache(cache_n)
+    for label, total in (("spec, first build+run", cache_first),
+                         ("spec, same-shape re-run", cache_second)):
+        rows.append({"replicas": f"{cache_n} ({label})",
+                     "total_s": round(total, 4),
+                     "per_replica_ms": round(total / cache_n * 1e3, 3),
+                     "replicas_per_s": round(cache_n / total, 1)})
+
     checks = {
         "T1_jit_beats_python_ref": bool(per_replica_1 < ref_per_replica),
         "T2_vmap_amortizes": bool(per_replica_big
@@ -223,14 +266,23 @@ def run(out_dir=None, smoke: bool = False) -> dict:
             trace_per * 1e3 < 3 * static_same_n),
         "T6_learned_dispatch_overhead_bounded": bool(mlp_per < 3 * mct_per),
         "T7_has_deps_overhead_bounded": bool(inert_per < 2 * plain_per),
+        "T8_experiment_cache_hits": bool(
+            cache_second * 5 <= cache_first
+            and cache_stats == {"hits": 1, "misses": 1}),
     }
     payload = {"rows": rows,
                "ref_per_replica_ms": round(ref_per_replica * 1e3, 2),
+               "experiment_cache": {
+                   "first_s": round(cache_first, 4),
+                   "second_s": round(cache_second, 4),
+                   "speedup": round(cache_first / cache_second, 1),
+                   **cache_stats},
                "checks": checks}
     save_result("bench_engine", payload, out_dir)
     print("\n## bench_engine — replica throughput "
           f"(python ref: {ref_per_replica*1e3:.1f} ms/replica)")
     print(md_table(rows))
+    print("experiment cache:", payload["experiment_cache"])
     print("checks:", checks)
     return payload
 

@@ -57,6 +57,25 @@ def gmm_structure(n_tokens: int, n_experts: int, top_k: int,
             "padded_row_skip_frac": round(skip, 3)}
 
 
+def argmin_structure(n: int, m: int, bn: int = 256) -> dict:
+    """Structural accounting for the scheduler masked-argmin kernel
+    (kernels/sched_argmin.py) at E2C sweep shapes: VMEM working set per
+    grid step (value + mask block), sequential grid length, and the
+    padded-tail fraction the last block masks out.  Kept measured here
+    so the kernel cannot bit-rot while it waits to be plugged into the
+    batch scheduling policies."""
+    bn_eff = min(bn, n)
+    pad = (-n) % bn_eff
+    n_blocks = (n + pad) // bn_eff
+    vmem = bn_eff * m * (4 + 1)           # f32 values + bool mask block
+    return {
+        "tasks": n, "machines": m, "block_n": bn_eff,
+        "grid_steps": n_blocks,
+        "vmem_kb_per_step": round(vmem / 1024, 1),
+        "tail_pad_frac": round(pad / (n + pad), 3) if pad else 0.0,
+    }
+
+
 def quick_allclose() -> dict:
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(k1, (2, 256, 128), jnp.float32)
@@ -76,8 +95,17 @@ def quick_allclose() -> dict:
     mask = jax.random.bernoulli(k1, 0.5, (512, 16))
     idx, _ = ops.masked_argmin(vals, mask, interpret=True)
     ridx, _ = ref.masked_argmin_ref(vals, mask)
+    # padded-tail shape (N % block_n != 0), all-positive values so a pad
+    # leak would win the argmin — the bit-rot canary for the kernel
+    vals_t = jax.random.uniform(k2, (100, 7), jnp.float32, 1.0, 2.0)
+    mask_t = jax.random.bernoulli(k3, 0.5, (100, 7))
+    idx_t, _ = ops.masked_argmin(vals_t, mask_t, block_n=32,
+                                 interpret=True)
+    ridx_t, _ = ref.masked_argmin_ref(vals_t, mask_t)
     return {"flash_attention_max_err": fa, "grouped_matmul_max_err": gm,
-            "sched_argmin_match": bool(int(idx) == int(ridx))}
+            "sched_argmin_match": bool(int(idx) == int(ridx)),
+            "sched_argmin_padded_tail_match":
+                bool(int(idx_t) == int(ridx_t))}
 
 
 def run(out_dir=None) -> dict:
@@ -87,15 +115,27 @@ def run(out_dir=None) -> dict:
                flash_structure(32768, 256, window=1024)]
     gmm_rows = [gmm_structure(4096, 64, 6),      # deepseek-moe
                 gmm_structure(4096, 128, 8)]     # qwen3-moe
+    am_rows = [argmin_structure(4 * 16, 16),     # lcap*M head slots
+               argmin_structure(4 * 64, 64),
+               argmin_structure(1000, 24, bn=256)]  # ragged tail
     correctness = quick_allclose()
+    checks = {
+        "K1_sched_argmin_matches_oracle": bool(
+            correctness["sched_argmin_match"]
+            and correctness["sched_argmin_padded_tail_match"]),
+    }
     payload = {"flash_attention": fa_rows, "grouped_matmul": gmm_rows,
-               "correctness": correctness}
+               "sched_argmin": am_rows,
+               "correctness": correctness, "checks": checks}
     save_result("bench_kernels", payload, out_dir)
     print("\n## bench_kernels — flash attention block structure")
     print(md_table(fa_rows))
     print("\n## bench_kernels — grouped GEMM capacity structure")
     print(md_table(gmm_rows))
+    print("\n## bench_kernels — scheduler masked-argmin structure")
+    print(md_table(am_rows))
     print("correctness:", correctness)
+    print("checks:", checks)
     return payload
 
 

@@ -51,9 +51,9 @@ def main(argv=None):
             ("roofline", roofline),
             ("eet_from_roofline", eet_from_roofline)]
     if smoke:
-        # CI subset: the engine claims + the cheap readers
-        smoke_set = {"bench_engine", "bench_energy", "roofline",
-                     "eet_from_roofline"}
+        # CI subset: the engine claims + the kernel canary + cheap readers
+        smoke_set = {"bench_engine", "bench_energy", "bench_kernels",
+                     "roofline", "eet_from_roofline"}
         mods = [(n, m) for n, m in mods if n in smoke_set]
     if argv:
         mods = [(n, m) for n, m in mods if n in argv]

@@ -4,18 +4,18 @@
 
 The E2C paper's motivation: evaluating every (policy x workload x
 configuration) permutation on real infrastructure is cost- and
-time-prohibitive.  Here each permutation is one vmapped replica of the
-jit'd DES engine; on this host they vectorize, on a pod the replica axis
-shards over all 256/512 chips unchanged (launch/sim.py, proven by
+time-prohibitive.  Here the whole study is ONE declarative
+``ExperimentSpec`` (docs/experiments.md): each permutation is a vmapped
+replica of the jit'd DES engine; on this host they vectorize, on a pod
+pass ``run_experiment(spec, mesh=...)`` and the replica axis shards
+over all 256/512 chips unchanged (proven by
 ``python -m repro.launch.dryrun --sim``).
 """
 import argparse
 import time
 
-import numpy as np
-
-from repro.core.schedulers import POLICY_NAMES
-from repro.launch.sim import build_sim_sweep, make_replicas
+from repro.launch.experiment import (ExperimentSpec, FleetAxis, PolicyAxis,
+                                     WorkloadAxis, run_experiment)
 
 
 def main():
@@ -25,29 +25,29 @@ def main():
     ap.add_argument("--machines", type=int, default=12)
     args = ap.parse_args()
 
-    policies = ["fcfs", "rr", "met", "mct", "minmin", "ee_mct"]
-    inputs = make_replicas(args.replicas, args.tasks, args.machines,
-                           policies=policies, seed=0)
-    sweep = build_sim_sweep(args.tasks, args.machines)
+    spec = ExperimentSpec(
+        n_replicas=args.replicas,
+        fleet=FleetAxis(args.machines),
+        workload=WorkloadAxis(args.tasks),
+        policy=PolicyAxis(("fcfs", "rr", "met", "mct", "minmin",
+                           "ee_mct")),
+        seed=0)
 
     t0 = time.perf_counter()
-    out = sweep(*inputs)
-    out["completed"].block_until_ready()
+    result = run_experiment(spec)
+    result.metrics["completed"].block_until_ready()
     dt = time.perf_counter() - t0
     print(f"{args.replicas} replicas x {args.tasks} tasks x "
           f"{args.machines} machines in {dt:.2f}s "
           f"({args.replicas/dt:.0f} replicas/s)\n")
 
-    pids = np.asarray(inputs[3])
     print(f"{'policy':8s} {'completion':>10s} {'missed':>7s} "
           f"{'energy kJ':>10s} {'resp s':>7s}")
-    for i, pol in enumerate(policies):
-        sel = np.asarray([POLICY_NAMES[p] == pol for p in pids])
-        print(f"{pol:8s} "
-              f"{float(np.mean(np.asarray(out['completion_rate'])[sel])):10.3f} "
-              f"{float(np.mean(np.asarray(out['missed'])[sel])):7.1f} "
-              f"{float(np.mean(np.asarray(out['energy'])[sel]))/1e3:10.2f} "
-              f"{float(np.mean(np.asarray(out['mean_response'])[sel])):7.2f}")
+    for row in result.by_policy(("completion_rate", "missed", "energy",
+                                 "mean_response")):
+        print(f"{row['policy']:8s} {row['completion_rate']:10.3f} "
+              f"{row['missed']:7.1f} {row['energy']/1e3:10.2f} "
+              f"{row['mean_response']:7.2f}")
 
 
 if __name__ == "__main__":

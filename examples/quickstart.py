@@ -40,3 +40,6 @@ print(report.ascii_gantt(final))
 print()
 print("try: policy='fcfs' vs 'mct' vs 'ee_mct' — or plug in your own "
       "(repro.core.schedulers.register_policy)")
+print("scale up: declare the whole (policy x scenario x workload) grid "
+      "as one ExperimentSpec — examples/policy_sweep.py, "
+      "docs/experiments.md")

@@ -5,9 +5,10 @@
 The experiments the E2C GUI could never run at scale: how does each
 scheduling policy hold up when machines fail and repair (or get spot-
 reclaimed), and what does the energy/availability trade-off look like
-across DVFS operating points?  Every (failure-rate x DVFS x policy) cell
-is one vmapped replica of the jit'd engine — the scenario axis shards
-over a pod exactly like the workload axis (launch/sim.py).
+across DVFS operating points?  The whole grid is one declarative
+``ExperimentSpec`` (docs/experiments.md): every (failure-rate x DVFS x
+policy) cell is one vmapped replica of the jit'd engine, and the
+scenario axis shards over a pod exactly like the workload axis.
 """
 import argparse
 import time
@@ -15,10 +16,12 @@ import time
 import numpy as np
 
 from repro.core.schedulers import POLICY_NAMES
-from repro.launch.sim import build_scenario_sweep, make_scenario_replicas
+from repro.launch.experiment import (ExperimentSpec, FleetAxis, PolicyAxis,
+                                     ScenarioAxis, WorkloadAxis,
+                                     run_experiment)
 
-FAIL_RATES = [0.0, 0.05, 0.2]
-DVFS = ["nominal", "powersave"]
+FAIL_RATES = (0.0, 0.05, 0.2)
+DVFS = ("nominal", "powersave")
 
 
 def main():
@@ -28,22 +31,26 @@ def main():
     ap.add_argument("--machines", type=int, default=8)
     args = ap.parse_args()
 
-    policies = ["mct", "minmin", "ee_mct"]
-    inputs = make_scenario_replicas(
-        args.replicas, args.tasks, args.machines, policies=policies,
-        fail_rates=FAIL_RATES, dvfs_states=DVFS, spot_frac=0.5, seed=0)
-    sweep = build_scenario_sweep(args.tasks, args.machines)
+    policies = ("mct", "minmin", "ee_mct")
+    spec = ExperimentSpec(
+        n_replicas=args.replicas,
+        fleet=FleetAxis(args.machines),
+        workload=WorkloadAxis(args.tasks),
+        scenario=ScenarioAxis(FAIL_RATES, DVFS, spot_frac=0.5),
+        policy=PolicyAxis(policies),
+        seed=0)
 
     t0 = time.perf_counter()
-    out = sweep(*inputs)
-    out["completed"].block_until_ready()
+    result = run_experiment(spec)
+    result.metrics["completed"].block_until_ready()
     dt = time.perf_counter() - t0
     print(f"{args.replicas} scenario replicas x {args.tasks} tasks x "
           f"{args.machines} machines in {dt:.2f}s "
           f"({args.replicas/dt:.0f} replicas/s)\n")
 
-    pids = np.asarray(inputs[3])
-    speeds = np.asarray(inputs[4].speed)[:, 0]       # fleet-wide per replica
+    out = result.metrics
+    pids = np.asarray(result.replicas.policy_ids)
+    speeds = np.asarray(result.replicas.dynamics.speed)[:, 0]
     fr = np.asarray([FAIL_RATES[r % len(FAIL_RATES)]
                      for r in range(args.replicas)])
     print(f"{'policy':8s} {'fail/s':>7s} {'dvfs':>10s} {'done':>6s} "

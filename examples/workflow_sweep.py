@@ -8,12 +8,13 @@
    dependency arrows + the realized critical-path overlay — the
    ``examples/gallery/workflow_gantt.svg`` committed in the README
    comes from exactly this script.
-2. Sweeps a (policy x DAG shape) grid in ONE jitted call
-   (``build_scenario_sweep(workflow=True)``) and prints the per-policy
-   mean makespan and completions.  HEFT optimizes *makespan* (its
-   upward-rank ordering keeps the critical path moving) and wins that
-   column; it is deadline-blind, so under deadline pressure MCT can
-   complete more tasks — read both columns.  See docs/workflows.md.
+2. Sweeps a (policy x DAG shape) grid in ONE jitted call — declared as
+   an ``ExperimentSpec`` with ``WorkloadAxis(shapes=...)``
+   (docs/experiments.md) — and prints the per-policy mean makespan and
+   completions.  HEFT optimizes *makespan* (its upward-rank ordering
+   keeps the critical path moving) and wins that column; it is
+   deadline-blind, so under deadline pressure MCT can complete more
+   tasks — read both columns.  See docs/workflows.md.
 """
 import sys
 
@@ -44,17 +45,16 @@ path = viz.save(f"{outdir}/workflow_gantt.svg",
 print("wrote", path)
 
 # --- 2. (policy x DAG shape) sweep in one jitted call ----------------------
-import jax  # noqa: E402
-
-from repro.launch.sim import (build_scenario_sweep,  # noqa: E402
-                              make_workflow_replicas)
+from repro.launch.experiment import (ExperimentSpec, FleetAxis,  # noqa: E402
+                                     PolicyAxis, WorkloadAxis,
+                                     run_experiment)
 
 policies = ["heft", "mct", "rr"]
-inputs = make_workflow_replicas(18, 24, 4, policies=policies,
-                                shapes=("chain", "fork_join", "layered"),
-                                seed=0)
-sweep = jax.jit(build_scenario_sweep(24, 4, workflow=True))
-out = sweep(*inputs)
+spec = ExperimentSpec(
+    n_replicas=18, fleet=FleetAxis(4),
+    workload=WorkloadAxis(24, shapes=("chain", "fork_join", "layered")),
+    policy=PolicyAxis(tuple(policies)), seed=0)
+out = run_experiment(spec).metrics
 mk = np.asarray(out["makespan"])
 done = np.asarray(out["completed"])
 print("\npolicy   mean_makespan  mean_completed   (18 paired DAG replicas;")

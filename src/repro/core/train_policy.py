@@ -105,7 +105,8 @@ def make_fitness(train_inputs: tuple, sim_params: E.SimParams,
     population version ``fitness_pop(stacked_params) -> (K,)``.
 
     ``train_inputs`` is the 5-tuple from
-    ``launch.learn.make_grid`` / ``launch.sim.make_scenario_replicas``
+    ``normalize(learn.grid_spec(...)).legacy()`` (or any scenario-mode
+    ``ExperimentSpec`` — docs/experiments.md)
     (task_tables, mtypes, tables, policy_ids, dynamics) — the policy_ids
     column is ignored (the trained policy id is fixed).  ``e_scale``
     defaults to the grid-mean energy of MCT, computed once here, so the
@@ -138,15 +139,13 @@ def heuristic_scores(inputs: tuple, policies: list[str],
     With ``raw_energy=True`` returns each replica's total energy instead
     (used to calibrate ``e_scale``)."""
     tt, mt, tb, _pids, dyn = inputs
-    from repro.launch.sim import jitted_scenario_sweep
-    n_tasks = int(tt.arrival.shape[-1])
-    n_machines = int(mt.shape[-1])
-    sweep = jitted_scenario_sweep(n_tasks, n_machines, sim_params)
+    from repro.launch.experiment import compile_sweep
+    sweep = compile_sweep(sim_params)
     out = {}
     n_rep = int(tt.arrival.shape[0])
     for pol in policies:
         pids = jnp.full((n_rep,), P.POLICY_IDS[pol], jnp.int32)
-        m = sweep(tt, mt, tb, pids, dyn)
+        m = sweep(tt, mt, tb, pids, dyn, None, None)
         if raw_energy:
             out[pol] = np.asarray(m["energy"])
         else:

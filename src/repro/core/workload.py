@@ -191,8 +191,8 @@ def onoff_workload(n_tasks: int, rate: float, n_task_types: int, *,
     return Workload(arrival, type_id, deadline.astype(np.float32))
 
 
-# Named arrival processes with a common call shape, so grid builders can
-# treat "arrival pattern" as a sweep axis (launch/sim.py, launch/learn.py):
+# Named arrival processes with a common call shape, so experiment specs
+# can treat "arrival pattern" as a sweep axis (launch/experiment.py):
 # f(n_tasks, rate, n_task_types, mean_eet, seed) -> Workload
 ARRIVAL_GENERATORS = {
     "poisson": lambda n, rate, ntt, me, seed: poisson_workload(
@@ -205,6 +205,28 @@ ARRIVAL_GENERATORS = {
     "onoff": lambda n, rate, ntt, me, seed: onoff_workload(
         n, rate=rate, n_task_types=ntt, mean_eet=me, slack=4.0, seed=seed),
 }
+
+
+def register_arrival_generator(name: str, fn) -> None:
+    """Register a custom arrival process as a sweep axis value.
+
+    ``fn(n_tasks, rate, n_task_types, mean_eet, seed) -> Workload``.
+    Registered names are immediately valid in
+    ``experiment.WorkloadAxis(arrivals=...)``; duplicates raise."""
+    if name in ARRIVAL_GENERATORS:
+        raise ValueError(f"arrival generator {name!r} already registered")
+    ARRIVAL_GENERATORS[name] = fn
+
+
+def resolve_arrivals(names) -> tuple[str, ...]:
+    """Validate arrival-generator names against the registry (the
+    spec-consumable view of ``ARRIVAL_GENERATORS``)."""
+    names = tuple(names)
+    unknown = [n for n in names if n not in ARRIVAL_GENERATORS]
+    if unknown:
+        raise ValueError(f"unknown arrival generators {unknown}; known: "
+                         f"{sorted(ARRIVAL_GENERATORS)}")
+    return names
 
 
 # ---------------------------------------------------------------------------
@@ -390,8 +412,8 @@ def layered_workflow(n_tasks: int, n_task_types: int = 1, *,
                               slack, slack_jitter, rng)
 
 
-# Named DAG shapes with a common call shape, so sweep builders can treat
-# "workflow shape" as a grid axis (launch/sim.py):
+# Named DAG shapes with a common call shape, so experiment specs can
+# treat "workflow shape" as a grid axis (launch/experiment.py):
 # f(n_tasks, n_task_types, mean_eet, seed) -> Workflow
 WORKFLOW_GENERATORS = {
     "chain": lambda n, ntt, me, seed: chain_workflow(
@@ -404,6 +426,28 @@ WORKFLOW_GENERATORS = {
     "layered": lambda n, ntt, me, seed: layered_workflow(
         n, ntt, n_layers=4, mean_eet=me, seed=seed),
 }
+
+
+def register_workflow_generator(name: str, fn) -> None:
+    """Register a custom DAG shape as a sweep axis value.
+
+    ``fn(n_tasks, n_task_types, mean_eet, seed) -> Workflow``.
+    Registered names are immediately valid in
+    ``experiment.WorkloadAxis(shapes=...)``; duplicates raise."""
+    if name in WORKFLOW_GENERATORS:
+        raise ValueError(f"workflow generator {name!r} already registered")
+    WORKFLOW_GENERATORS[name] = fn
+
+
+def resolve_shapes(names) -> tuple[str, ...]:
+    """Validate DAG-shape names against the registry (the spec-consumable
+    view of ``WORKFLOW_GENERATORS``)."""
+    names = tuple(names)
+    unknown = [n for n in names if n not in WORKFLOW_GENERATORS]
+    if unknown:
+        raise ValueError(f"unknown workflow generators {unknown}; known: "
+                         f"{sorted(WORKFLOW_GENERATORS)}")
+    return names
 
 
 # ---------------------------------------------------------------------------

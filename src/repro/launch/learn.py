@@ -3,10 +3,12 @@ evaluate on a held-out grid, report learned-vs-heuristic scoreboards.
 
 The workflow (docs/learned_scheduling.md):
 
-  1. ``make_grid`` builds a (failure-rate × DVFS × arrival-pattern)
-     scenario grid — the same stacked 5-tuple the scenario sweeps take,
-     with the policy-id column left as a placeholder because the grid is
-     re-swept once per policy.
+  1. ``grid_spec`` declares a (failure-rate × DVFS × arrival-pattern)
+     scenario grid as an ``ExperimentSpec`` (docs/experiments.md); its
+     normalized form is the stacked 5-tuple the sweeps take, with the
+     policy-id column left as a placeholder because the grid is
+     re-swept once per policy.  (``make_grid`` is the deprecated
+     tuple-returning shim.)
   2. ``core.train_policy.train`` runs antithetic ES on the training grid
      (one jitted call per generation, (2·pop+1) × S replicas each).
   3. ``scoreboard`` re-evaluates every heuristic plus the trained
@@ -32,34 +34,43 @@ from repro.core import neural as NN
 from repro.core import schedulers as P
 from repro.core import train_policy as TP
 from repro.core import viz
-from repro.launch.sim import jitted_scenario_sweep, make_scenario_replicas
+from repro.launch.experiment import (ExperimentSpec, FleetAxis, PolicyAxis,
+                                     ScenarioAxis, WorkloadAxis,
+                                     compile_sweep, normalize)
 
 BASELINES = ["fcfs", "rr", "met", "mct", "ee_met", "ee_mct", "minmin",
              "maxmin", "edf_mct"]
 
 
-def make_grid(n_replicas: int, n_tasks: int, n_machines: int, *,
+def grid_spec(n_replicas: int, n_tasks: int, n_machines: int, *,
               n_task_types: int = 4, n_machine_types: int = 3,
               fail_rates=(0.0, 0.1), dvfs_states=("nominal", "powersave"),
               arrivals=("poisson", "bursty"), rate: float = 4.0,
               spot_frac: float = 0.5, mttr: float = 4.0,
-              n_intervals: int = 4, seed: int = 0) -> tuple:
-    """(failure-rate × DVFS × arrival-pattern) evaluation grid, stacked.
+              n_intervals: int = 4, seed: int = 0) -> ExperimentSpec:
+    """(failure-rate × DVFS × arrival-pattern) evaluation grid as a spec.
 
-    A thin wrapper over ``launch.sim.make_scenario_replicas`` (one
-    construction path for sweep and training grids): the policy axis is
-    pinned to a single placeholder (``mct``), so the arrival pattern —
-    replica ``r`` gets ``arrivals[(r // (F·D)) % A]`` — is the third
-    grid axis and evaluation re-sweeps the *same* grid once per policy,
-    which is what makes the comparison paired (identical scenarios for
-    every policy).
+    The policy axis is pinned to a single placeholder (``mct``), so the
+    arrival pattern — replica ``r`` gets ``arrivals[(r // (F·D)) % A]``
+    — is the third grid axis and evaluation re-sweeps the *same*
+    normalized grid once per policy, which is what makes the comparison
+    paired (identical scenarios for every policy).
     """
-    return make_scenario_replicas(
-        n_replicas, n_tasks, n_machines, n_task_types, n_machine_types,
-        policies=["mct"], fail_rates=list(fail_rates),
-        dvfs_states=list(dvfs_states), arrivals=tuple(arrivals),
-        rate=rate, spot_frac=spot_frac, mttr=mttr,
-        n_intervals=n_intervals, seed=seed)
+    return ExperimentSpec(
+        n_replicas, FleetAxis(n_machines, n_machine_types),
+        WorkloadAxis(n_tasks, n_task_types, rate, arrivals=tuple(arrivals)),
+        scenario=ScenarioAxis(tuple(fail_rates), tuple(dvfs_states),
+                              spot_frac, mttr, n_intervals),
+        policy=PolicyAxis(("mct",)), seed=seed)
+
+
+def make_grid(n_replicas: int, n_tasks: int, n_machines: int,
+              **kw) -> tuple:
+    """DEPRECATED shim -> ``normalize(grid_spec(...)).legacy()``."""
+    from repro.launch.sim import _deprecated
+    _deprecated("make_grid", "normalize(learn.grid_spec(...))")
+    return normalize(grid_spec(n_replicas, n_tasks, n_machines,
+                               **kw)).legacy()
 
 
 def scoreboard(inputs: tuple, policies: list[str],
@@ -77,21 +88,20 @@ def scoreboard(inputs: tuple, policies: list[str],
     from the sweep this function runs anyway — every policy's grid is
     swept exactly once.
     """
+    from repro.launch.experiment import Replicas
+    if isinstance(inputs, Replicas):
+        inputs = inputs.legacy()
     tt, mt, tb, _pids, dyn = inputs
-    n_tasks = int(tt.arrival.shape[-1])
-    n_machines = int(mt.shape[-1])
     n_rep = int(tt.arrival.shape[0])
     trained = trained or {}
-    sweep = jitted_scenario_sweep(n_tasks, n_machines, sim_params)
-    sweep_pp = jitted_scenario_sweep(n_tasks, n_machines, sim_params,
-                                     learned=True)
+    # one cached executable serves both the heuristic and the learned
+    # sweeps (jax specializes per policy-params structure inside it)
+    sweep = compile_sweep(sim_params)
     metrics: dict[str, dict] = {}
     for pol in policies:
         pids = jnp.full((n_rep,), P.POLICY_IDS[pol], jnp.int32)
-        if pol in trained:
-            metrics[pol] = sweep_pp(tt, mt, tb, pids, dyn, trained[pol])
-        else:
-            metrics[pol] = sweep(tt, mt, tb, pids, dyn)
+        metrics[pol] = sweep(tt, mt, tb, pids, dyn, None,
+                             trained.get(pol))
     if e_scale is None:
         ref = metrics.get("mct") or next(iter(metrics.values()))
         e_scale = float(np.mean(np.asarray(ref["energy"])))
@@ -128,11 +138,13 @@ def train_and_evaluate(*, n_train: int = 16, n_test: int = 16,
     saw) — the generalization axis the paper's scenario studies sweep.
     """
     t0 = time.perf_counter()
-    train_grid = make_grid(n_train, n_tasks, n_machines,
-                           arrivals=("poisson", "bursty"), seed=seed)
-    test_grid = make_grid(n_test, n_tasks, n_machines,
-                          arrivals=("poisson", "diurnal", "onoff"),
-                          seed=seed + 10_000)
+    train_grid = normalize(grid_spec(
+        n_train, n_tasks, n_machines, arrivals=("poisson", "bursty"),
+        seed=seed)).legacy()
+    test_grid = normalize(grid_spec(
+        n_test, n_tasks, n_machines,
+        arrivals=("poisson", "diurnal", "onoff"),
+        seed=seed + 10_000)).legacy()
     trained, train_hist = {}, {}
     for pol in policies:
         res = TP.train(train_grid, policy=pol, sim_params=sim_params,

@@ -52,3 +52,21 @@ def mesh_dp_size(mesh) -> int:
 
 def mesh_tp_size(mesh) -> int:
     return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def mesh_device_count(mesh) -> int:
+    """Total devices in the mesh (the replica axis must divide this)."""
+    out = 1
+    for a in mesh.axis_names:
+        out *= mesh.shape[a]
+    return out
+
+
+def replica_sharding(mesh):
+    """NamedSharding placing dim 0 (the replica axis) over EVERY mesh
+    axis jointly, remaining dims replicated — how the experiment layer
+    (``launch/experiment.py``) shards a stacked ``Replicas`` pytree
+    whose leaves have arbitrary trailing ranks."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as PS
+    return NamedSharding(mesh, PS(tuple(mesh.axis_names)))

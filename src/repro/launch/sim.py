@@ -1,174 +1,153 @@
-"""Pod-scale E2C Monte-Carlo sweeps under pjit.
+"""Legacy sweep-builder surface — thin deprecated shims over the
+declarative :mod:`repro.launch.experiment` layer.
 
 The paper's motivating workflow — "examine all permutations of
-configurations, workload intensities and scheduling policies" — becomes
-one SPMD program: R simulation replicas (one per (workload draw, policy,
-EET sample, queue size) combination) are vmapped and the replica axis is
-sharded over every mesh axis.  256 chips run 256x the replicas of the
-single-machine GUI tool in the same wall time; that *is* the TPU-native
-reproduction of the paper's value proposition.
+configurations, workload intensities and scheduling policies" — is now
+ONE declarative object: build an ``ExperimentSpec`` and call
+``run_experiment`` (docs/experiments.md).  The seven builders that grew
+here across PRs 1-4 (``build_sim_sweep``, ``build_scenario_sweep``,
+``build_traced_sweep``, ``jitted_scenario_sweep``,
+``make_scenario_replicas``, ``make_workflow_replicas`` and
+``learn.make_grid``) survive as shims that delegate to the spec
+pipeline: replica construction is bitwise-identical and sweep results
+are the same arrays (golden-tested in tests/test_experiment.py), but
+each shim emits one ``DeprecationWarning`` per process.
 
-``build_sim_sweep`` returns a jitted function whose inputs carry a
-leading replica axis; outputs are per-replica summary metrics (small),
-never full simulation states.
+Still first-class here (not deprecated):
+
+* :func:`make_replicas` — the base independent-replica constructor
+  (delegates to the spec materializer);
+* :func:`run_grouped_sweep` — the policy-grouped execution strategy;
+* :func:`trace_replica` — re-run one replica of a stacked sweep with
+  tracing on;
+* :func:`build_sharded_sweep` — mesh-sharded artifacts for the dry-run.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as PS
 
-from repro.core import energy as EN
 from repro.core import engine as E
 from repro.core import schedulers as P
 from repro.core import state as S
-from repro.core.eet import EETTable, synth_eet
-from repro.core.workload import (ARRIVAL_GENERATORS, WORKFLOW_GENERATORS,
-                                 make_scenario, poisson_workload)
+from repro.launch.experiment import (ExperimentSpec, FleetAxis, PolicyAxis,
+                                     ScenarioAxis, WorkloadAxis,
+                                     compile_sweep, normalize,
+                                     summarize_replica)
+
+__all__ = [
+    "summarize_replica", "build_sim_sweep", "build_scenario_sweep",
+    "build_traced_sweep", "jitted_scenario_sweep", "trace_replica",
+    "run_grouped_sweep", "make_replicas", "make_scenario_replicas",
+    "make_workflow_replicas", "build_sharded_sweep", "SimSweepArtifacts",
+]
+
+_WARNED: set[str] = set()
 
 
-def summarize_replica(st: S.SimState, tables: S.StaticTables,
-                      dynamics: S.MachineDynamics | None = None) -> dict:
-    """Scalar metrics for one replica (traced; used under vmap).
-
-    With ``dynamics`` the summary also reports preemption counts, mean
-    machine availability, and the active/idle energy split with downtime
-    (powered-off machines) subtracted from the idle integral.
-    """
-    status = st.tasks.status
-    completed = jnp.sum(status == S.COMPLETED)
-    missed = jnp.sum((status == S.MISSED_QUEUE)
-                     | (status == S.MISSED_RUNNING))
-    cancelled = jnp.sum(status == S.CANCELLED)
-    preempted = jnp.sum(status == S.PREEMPTED)
-    makespan = EN.makespan(st)
-    active_e = jnp.sum(st.machines.energy)
-    idle_e = jnp.sum(EN.idle_energy(st, tables, dynamics))
-    avail = jnp.float32(1.0) if dynamics is None else jnp.mean(
-        EN.availability(dynamics, makespan))
-    n = status.shape[0]
-    return {
-        "completed": completed, "missed": missed, "cancelled": cancelled,
-        "preempted": preempted,
-        "requeues": jnp.sum(st.n_preempts) - preempted,
-        "availability": avail,
-        "completion_rate": completed / n,
-        "makespan": makespan,
-        "energy": active_e + idle_e,
-        "active_energy": active_e,
-        "idle_energy": idle_e,
-        "mean_response": jnp.sum(jnp.where(status == S.COMPLETED,
-                                           st.tasks.t_end - st.tasks.arrival,
-                                           0.0)) / jnp.maximum(completed, 1),
-    }
+def _deprecated(name: str, hint: str) -> None:
+    """One ``DeprecationWarning`` per builder per process (tests reset
+    via ``_WARNED.clear()``)."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"launch.sim.{name} is deprecated: build an ExperimentSpec and "
+        f"use repro.launch.experiment.{hint} instead (docs/experiments.md)",
+        DeprecationWarning, stacklevel=3)
 
 
+# ---------------------------------------------------------------------------
+# Sweep builders (deprecated shims over the cached canonical executable)
+# ---------------------------------------------------------------------------
 def build_sim_sweep(n_tasks: int, n_machines: int,
                     params: E.SimParams = E.SimParams(),
                     learned: bool = False, workflow: bool = False):
-    """-> f(task_table[R], mtype[R,M], tables[R], policy[R]) -> metrics[R].
+    """DEPRECATED shim -> ``experiment.compile_sweep(params)``.
 
-    With ``learned=True`` the sweep takes one extra ``policy_params``
-    pytree (``neural.PolicyParams``) SHARED across replicas (vmap axis
-    ``None``) — the shape used to evaluate one trained policy against a
-    replica grid.  For a *population* of parameter vectors (ES training)
-    vmap the params axis instead — see ``core/train_policy.py``.
-
-    With ``workflow=True`` the sweep takes one extra stacked ``parents``
-    input ((R, N, K) int32, -1 padded) — the DAG axis; each replica's
-    precedence constraints Monte-Carlo like any other axis
-    (docs/workflows.md).
+    -> f(task_table[R], mtype[R,M], tables[R], policy[R][, parents[R]]
+         [, policy_params]) -> metrics[R]   (legacy argument orders).
     """
+    _deprecated("build_sim_sweep", "run_experiment / compile_sweep")
+    fn = compile_sweep(params)
     if learned:
-        def one_pp(tasks, mtype, tables, policy_id, policy_params):
-            st = E.run_sim(tasks, mtype, tables, policy_id, params,
-                           policy_params=policy_params)
-            return summarize_replica(st, tables)
-        return jax.vmap(one_pp, in_axes=(0, 0, 0, 0, None))
-
+        return lambda tt, mt, tb, pid, pp: fn(tt, mt, tb, pid, None, None,
+                                              pp)
     if workflow:
-        def one_wf(tasks, mtype, tables, policy_id, parents):
-            st = E.run_sim(tasks, mtype, tables, policy_id, params,
-                           parents=parents)
-            return summarize_replica(st, tables)
-        return jax.vmap(one_wf)
-
-    def one(tasks, mtype, tables, policy_id):
-        st = E.run_sim(tasks, mtype, tables, policy_id, params)
-        return summarize_replica(st, tables)
-
-    return jax.vmap(one)
+        return lambda tt, mt, tb, pid, par: fn(tt, mt, tb, pid, None, par,
+                                               None)
+    return lambda tt, mt, tb, pid: fn(tt, mt, tb, pid, None, None, None)
 
 
 def build_scenario_sweep(n_tasks: int, n_machines: int,
                          params: E.SimParams = E.SimParams(),
                          learned: bool = False, workflow: bool = False):
-    """Scenario-axis sweep: like ``build_sim_sweep`` plus a stacked
-    ``MachineDynamics`` input, so a Monte-Carlo grid over failure rates /
-    spot semantics / DVFS states shards like any other replica axis.
-
-    -> f(task_table[R], mtype[R,M], tables[R], policy[R], dynamics[R])
-       -> metrics[R]
-
-    ``learned=True`` appends a shared ``policy_params`` argument exactly
-    like ``build_sim_sweep``.  ``workflow=True`` appends a stacked
-    ``parents[R]`` DAG input ((R, N, K) int32, -1 padded) — the sweep
-    shape behind ``make_workflow_replicas`` (docs/workflows.md).
-    """
+    """DEPRECATED shim -> ``experiment.compile_sweep(params)`` with a
+    stacked ``MachineDynamics`` input (legacy argument orders)."""
+    _deprecated("build_scenario_sweep", "run_experiment / compile_sweep")
+    fn = compile_sweep(params)
     if learned and workflow:
-        def one_full(tasks, mtype, tables, policy_id, dynamics, parents,
-                     policy_params):
-            st = E.run_sim(tasks, mtype, tables, policy_id, params,
-                           dynamics, policy_params, parents)
-            return summarize_replica(st, tables, dynamics)
-        return jax.vmap(one_full, in_axes=(0, 0, 0, 0, 0, 0, None))
-
+        return lambda tt, mt, tb, pid, dyn, par, pp: fn(tt, mt, tb, pid,
+                                                        dyn, par, pp)
     if learned:
-        def one_pp(tasks, mtype, tables, policy_id, dynamics,
-                   policy_params):
-            st = E.run_sim(tasks, mtype, tables, policy_id, params,
-                           dynamics, policy_params)
-            return summarize_replica(st, tables, dynamics)
-        return jax.vmap(one_pp, in_axes=(0, 0, 0, 0, 0, None))
-
+        return lambda tt, mt, tb, pid, dyn, pp: fn(tt, mt, tb, pid, dyn,
+                                                   None, pp)
     if workflow:
-        def one_wf(tasks, mtype, tables, policy_id, dynamics, parents):
-            st = E.run_sim(tasks, mtype, tables, policy_id, params,
-                           dynamics, parents=parents)
-            return summarize_replica(st, tables, dynamics)
-        return jax.vmap(one_wf)
-
-    def one(tasks, mtype, tables, policy_id, dynamics):
-        st = E.run_sim(tasks, mtype, tables, policy_id, params, dynamics)
-        return summarize_replica(st, tables, dynamics)
-
-    return jax.vmap(one)
+        return lambda tt, mt, tb, pid, dyn, par: fn(tt, mt, tb, pid, dyn,
+                                                    par, None)
+    return lambda tt, mt, tb, pid, dyn: fn(tt, mt, tb, pid, dyn, None, None)
 
 
 def build_traced_sweep(n_tasks: int, n_machines: int,
                        params: E.SimParams = E.SimParams()):
-    """Like ``build_sim_sweep``/``build_scenario_sweep`` but each replica
-    also returns its ``TraceBuffer`` — metrics stay per-replica scalars,
-    traces carry the full timeline (docs/visualization.md shows how to
-    render one replica or aggregate utilization across all of them).
-    Pass a stacked ``dynamics`` as the optional fifth argument for
-    scenario replicas.
+    """DEPRECATED shim -> ``experiment`` with ``trace=True``: each
+    replica also returns its ``TraceBuffer``.
 
     -> f(task_table[R], mtype[R,M], tables[R], policy[R][, dynamics[R]])
        -> (metrics[R], trace[R])
     """
-    params = params._replace(trace=True)
+    _deprecated("build_traced_sweep",
+                "run_experiment with ExperimentSpec(trace=True)")
+    fn = compile_sweep(params._replace(trace=True))
 
-    def one(tasks, mtype, tables, policy_id, dynamics=None):
-        st = E.run_sim(tasks, mtype, tables, policy_id, params, dynamics)
-        return summarize_replica(st, tables, dynamics), st.trace
+    def sweep(tt, mt, tb, pid, dynamics=None):
+        return fn(tt, mt, tb, pid, dynamics, None, None)
 
-    return jax.vmap(one)
+    return sweep
+
+
+_SWEEP_CACHE: dict = {}
+
+
+def jitted_scenario_sweep(n_tasks: int, n_machines: int,
+                          params: E.SimParams = E.SimParams(),
+                          learned: bool = False):
+    """DEPRECATED shim -> the experiment executable cache.
+
+    The retrace-avoidance this helper existed for is now the default:
+    ``experiment.compile_sweep`` caches ONE jitted callable per
+    ``SimParams`` and jax specializes per input structure inside it.
+    Kept so older call sites continue to get a stable callable identity
+    per (shape, params, learned) key.
+    """
+    _deprecated("jitted_scenario_sweep", "compile_sweep")
+    key = (n_tasks, n_machines, params, learned)
+    if key not in _SWEEP_CACHE:
+        fn = compile_sweep(params)
+        if learned:
+            _SWEEP_CACHE[key] = (
+                lambda tt, mt, tb, pid, dyn, pp: fn(tt, mt, tb, pid, dyn,
+                                                    None, pp))
+        else:
+            _SWEEP_CACHE[key] = (
+                lambda tt, mt, tb, pid, dyn: fn(tt, mt, tb, pid, dyn,
+                                                None, None))
+    return _SWEEP_CACHE[key]
 
 
 def trace_replica(inputs: tuple, i: int,
@@ -179,11 +158,13 @@ def trace_replica(inputs: tuple, i: int,
     The cheap path for "dump one replica's timeline from a big sweep":
     run the (traceless, fast) sweep, pick the replica you care about
     from its metrics, then re-simulate just that one with ``trace=True``
-    and hand the returned state to ``core/viz.py``.  ``inputs`` is the
-    4-tuple from ``make_replicas``, the 5-tuple (with dynamics) from
-    ``make_scenario_replicas``, or the 6-tuple (with dynamics + parents)
-    from ``make_workflow_replicas``.
+    and hand the returned state to ``core/viz.py``.  ``inputs`` is a
+    legacy 4/5/6-tuple or an ``experiment.Replicas`` (its ``legacy()``
+    view is taken automatically).
     """
+    from repro.launch.experiment import Replicas
+    if isinstance(inputs, Replicas):
+        inputs = inputs.legacy()
     rep = jax.tree.map(lambda x: jnp.asarray(x)[i], tuple(inputs))
     dyn = rep[4] if len(rep) > 4 else None
     par = rep[5] if len(rep) > 5 else None
@@ -192,28 +173,9 @@ def trace_replica(inputs: tuple, i: int,
                      parents=par)
 
 
-_SWEEP_CACHE: dict = {}
-
-
-def jitted_scenario_sweep(n_tasks: int, n_machines: int,
-                          params: E.SimParams = E.SimParams(),
-                          learned: bool = False):
-    """Cached ``jax.jit(build_scenario_sweep(...))``.
-
-    ``build_scenario_sweep`` returns a fresh closure each call, so
-    wrapping it in ``jax.jit`` at the call site recompiles the identical
-    engine sweep every time; evaluation helpers that sweep repeatedly
-    (``launch/learn.py`` scoreboards, ``core/train_policy.py`` e_scale
-    calibration) go through this cache instead — one compilation per
-    (shape, params, learned) per process.
-    """
-    key = (n_tasks, n_machines, params, learned)
-    if key not in _SWEEP_CACHE:
-        _SWEEP_CACHE[key] = jax.jit(
-            build_scenario_sweep(n_tasks, n_machines, params, learned))
-    return _SWEEP_CACHE[key]
-
-
+# ---------------------------------------------------------------------------
+# Policy-grouped execution (still first-class: a strategy, not a builder)
+# ---------------------------------------------------------------------------
 _GROUPED_CACHE: dict = {}
 
 
@@ -249,6 +211,14 @@ def run_grouped_sweep(inputs, params: E.SimParams = E.SimParams(),
     replicas) supplies learned-policy weights — how learned-vs-heuristic
     dispatch overhead is measured (benchmarks/bench_engine.py).
     """
+    from repro.launch.experiment import Replicas
+    if isinstance(inputs, Replicas):
+        if inputs.dynamics is not None or inputs.parents is not None:
+            raise ValueError(
+                "run_grouped_sweep only supports flat replicas; this "
+                "Replicas carries dynamics/parents — use "
+                "experiment.run_experiment for scenario/workflow grids")
+        inputs = inputs.legacy()
     tt, mt, tb, pids = inputs
     pids_np = np.asarray(pids)
     out_parts = {}
@@ -273,34 +243,24 @@ def run_grouped_sweep(inputs, params: E.SimParams = E.SimParams(),
     return merged
 
 
+# ---------------------------------------------------------------------------
+# Replica constructors (shims over experiment.normalize)
+# ---------------------------------------------------------------------------
 def make_replicas(n_replicas: int, n_tasks: int, n_machines: int,
                   n_task_types: int = 4, n_machine_types: int = 4, *,
                   policies: list[str] | None = None, rate: float = 4.0,
                   seed: int = 0) -> tuple:
-    """Host-side replica construction: workloads x policies x EET draws."""
+    """Host-side replica construction: workloads x policies x EET draws.
+
+    Delegates to ``experiment.normalize`` (the spec materializer); kept
+    first-class as the base independent-replica constructor.
+    """
     policies = policies or ["fcfs", "met", "mct", "minmin", "ee_mct"]
-    rng = np.random.default_rng(seed)
-    tts, mts, tabs, pids = [], [], [], []
-    for r in range(n_replicas):
-        eet = synth_eet(n_task_types, n_machine_types,
-                        inconsistency=0.3, seed=seed + r)
-        power = np.stack([
-            rng.uniform(20, 60, n_machine_types),
-            rng.uniform(80, 300, n_machine_types)], axis=1)
-        wl = poisson_workload(n_tasks, rate=rate,
-                              n_task_types=n_task_types,
-                              mean_eet=eet.eet.mean(1), slack=4.0,
-                              seed=seed + 7919 * r)
-        noise = rng.lognormal(0.0, 0.1, n_tasks).astype(np.float32)
-        tts.append(wl.to_task_table())
-        mts.append(rng.integers(0, n_machine_types, n_machines))
-        tabs.append(E.make_tables(eet, power.astype(np.float32), n_tasks,
-                                  noise=noise))
-        pids.append(P.POLICY_IDS[policies[r % len(policies)]])
-    stack = lambda trees: jax.tree.map(
-        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees)
-    return (stack(tts), jnp.asarray(np.stack(mts), jnp.int32),
-            stack(tabs), jnp.asarray(pids, jnp.int32))
+    spec = ExperimentSpec(
+        n_replicas, FleetAxis(n_machines, n_machine_types),
+        WorkloadAxis(n_tasks, n_task_types, rate),
+        policy=PolicyAxis(tuple(policies)), seed=seed)
+    return normalize(spec).legacy()
 
 
 def make_scenario_replicas(n_replicas: int, n_tasks: int, n_machines: int,
@@ -312,62 +272,26 @@ def make_scenario_replicas(n_replicas: int, n_tasks: int, n_machines: int,
                            spot_frac: float = 0.5, mttr: float = 4.0,
                            n_intervals: int = 4, rate: float = 4.0,
                            seed: int = 0) -> tuple:
-    """Host-side scenario grid: (failure rate x DVFS state x policy
-    [x arrival pattern]) cells, one replica each, stacked for one jitted
-    ``build_scenario_sweep`` call.  Eviction semantics is NOT a grid
-    axis: each replica draws kill-vs-requeue as an independent Bernoulli
-    (``spot_frac``) — pin it to 0.0 or 1.0 to compare the two cleanly.
+    """DEPRECATED shim -> ``experiment.normalize`` with a
+    ``ScenarioAxis`` (failure rate x DVFS x policy [x arrival] grid).
 
-    ``arrivals`` (optional) adds the arrival process as the outermost
-    grid axis — names from ``workload.ARRIVAL_GENERATORS`` ("poisson",
-    "bursty", "diurnal", "onoff"); omitted = Poisson everywhere, which
-    also preserves the exact replica draws of earlier revisions.
-
-    Returns ``(task_tables, mtypes, tables, policy_ids, dynamics)`` with a
-    leading replica axis on every leaf.
+    Returns ``(task_tables, mtypes, tables, policy_ids, dynamics)`` with
+    a leading replica axis on every leaf — bitwise-identical to the
+    pre-spec builder.
     """
+    _deprecated("make_scenario_replicas",
+                "normalize with ExperimentSpec(scenario=ScenarioAxis(...))")
     policies = policies or ["mct", "minmin", "ee_mct"]
     fail_rates = fail_rates if fail_rates is not None else [0.0, 0.05, 0.2]
     dvfs_states = dvfs_states or ["nominal", "powersave"]
-    n_f, n_d, n_p = len(fail_rates), len(dvfs_states), len(policies)
-    rng = np.random.default_rng(seed)
-    tts, mts, tabs, pids, dyns = [], [], [], [], []
-    for r in range(n_replicas):
-        eet = synth_eet(n_task_types, n_machine_types,
-                        inconsistency=0.3, seed=seed + r)
-        power = np.stack([
-            rng.uniform(20, 60, n_machine_types),
-            rng.uniform(80, 300, n_machine_types)], axis=1)
-        if arrivals is None:
-            wl = poisson_workload(n_tasks, rate=rate,
-                                  n_task_types=n_task_types,
-                                  mean_eet=eet.eet.mean(1), slack=4.0,
-                                  seed=seed + 7919 * r)
-        else:
-            gen = ARRIVAL_GENERATORS[
-                arrivals[(r // (n_f * n_d * n_p)) % len(arrivals)]]
-            wl = gen(n_tasks, rate, n_task_types, eet.eet.mean(1),
-                     seed + 7919 * r)
-        # mixed-radix decomposition r -> (fail, dvfs, policy, arrival) so
-        # the grid axes never alias (spot stays an independent random draw)
-        scen = make_scenario(
-            wl, n_machines,
-            fail_rate=fail_rates[r % n_f],
-            mttr=mttr,
-            spot=(rng.random() < spot_frac),
-            dvfs=dvfs_states[(r // n_f) % n_d],
-            n_intervals=n_intervals, seed=seed + 31 * r)
-        noise = rng.lognormal(0.0, 0.1, n_tasks).astype(np.float32)
-        tts.append(wl.to_task_table())
-        mts.append(rng.integers(0, n_machine_types, n_machines))
-        tabs.append(E.make_tables(eet, power.astype(np.float32), n_tasks,
-                                  noise=noise))
-        pids.append(P.POLICY_IDS[policies[(r // (n_f * n_d)) % n_p]])
-        dyns.append(scen.dynamics())
-    stack = lambda trees: jax.tree.map(
-        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees)
-    return (stack(tts), jnp.asarray(np.stack(mts), jnp.int32),
-            stack(tabs), jnp.asarray(pids, jnp.int32), stack(dyns))
+    spec = ExperimentSpec(
+        n_replicas, FleetAxis(n_machines, n_machine_types),
+        WorkloadAxis(n_tasks, n_task_types, rate,
+                     arrivals=None if arrivals is None else tuple(arrivals)),
+        scenario=ScenarioAxis(tuple(fail_rates), tuple(dvfs_states),
+                              spot_frac, mttr, n_intervals),
+        policy=PolicyAxis(tuple(policies)), seed=seed)
+    return normalize(spec).legacy()
 
 
 def make_workflow_replicas(n_replicas: int, n_tasks: int, n_machines: int,
@@ -379,70 +303,30 @@ def make_workflow_replicas(n_replicas: int, n_tasks: int, n_machines: int,
                            dvfs_states: list[str] | None = None,
                            spot_frac: float = 0.0, mttr: float = 4.0,
                            n_intervals: int = 4, seed: int = 0) -> tuple:
-    """Host-side workflow grid: (policy x DAG shape [x failure x DVFS])
-    cells, one replica each, stacked for one jitted
-    ``build_scenario_sweep(workflow=True)`` call.
-
-    ``shapes`` names ``workload.WORKFLOW_GENERATORS`` entries; parent
-    tables are padded to the grid's widest in-degree so the DAG axis
-    stacks like every other replica axis.  HEFT upward ranks are
-    precomputed per replica into ``StaticTables.rank``.
-
-    Unlike ``make_scenario_replicas``, the policy axis is *paired*: the
-    ``len(policies)`` consecutive replicas of a cell share the same DAG,
-    EET draw, fleet, noise and failure trace, so per-policy aggregates
-    are an apples-to-apples comparison (HEFT vs the rest on identical
-    instances).
+    """DEPRECATED shim -> ``experiment.normalize`` in workflow mode
+    (policy axis *paired* per DAG instance; parent tables padded to the
+    grid's widest in-degree; HEFT ranks precomputed).
 
     Returns ``(task_tables, mtypes, tables, policy_ids, dynamics,
-    parents)`` with a leading replica axis on every leaf.
+    parents)`` — bitwise-identical to the pre-spec builder.
     """
+    _deprecated("make_workflow_replicas",
+                "normalize with ExperimentSpec(WorkloadAxis(shapes=...))")
     policies = policies or ["heft", "mct", "rr"]
     fail_rates = fail_rates if fail_rates is not None else [0.0]
     dvfs_states = dvfs_states or ["nominal"]
-    n_p, n_s, n_f = len(policies), len(shapes), len(fail_rates)
-    tts, mts, tabs, pids, dyns, pars = [], [], [], [], [], []
-    for cell in range((n_replicas + n_p - 1) // n_p):
-        crng = np.random.default_rng(seed + 104729 * cell)
-        eet = synth_eet(n_task_types, n_machine_types,
-                        inconsistency=0.3, seed=seed + cell)
-        power = np.stack([
-            crng.uniform(20, 60, n_machine_types),
-            crng.uniform(80, 300, n_machine_types)], axis=1)
-        gen = WORKFLOW_GENERATORS[shapes[cell % n_s]]
-        wf = gen(n_tasks, n_task_types, eet.eet.mean(1),
-                 seed + 7919 * cell)
-        scen = make_scenario(
-            wf.workload, n_machines,
-            fail_rate=fail_rates[(cell // n_s) % n_f],
-            mttr=mttr, spot=(crng.random() < spot_frac),
-            dvfs=dvfs_states[(cell // (n_s * n_f)) % len(dvfs_states)],
-            n_intervals=n_intervals, seed=seed + 31 * cell)
-        noise = crng.lognormal(0.0, 0.1, n_tasks).astype(np.float32)
-        tt = wf.workload.to_task_table()
-        mt = crng.integers(0, n_machine_types, n_machines)
-        tab = E.make_tables(eet, power.astype(np.float32), n_tasks,
-                            noise=noise, rank=wf.ranks(eet.eet.mean(1)))
-        dyn = scen.dynamics()
-        # one instance per cell, repeated for each paired policy
-        for p in range(min(n_p, n_replicas - cell * n_p)):
-            tts.append(tt)
-            mts.append(mt)
-            tabs.append(tab)
-            pids.append(P.POLICY_IDS[policies[p]])
-            dyns.append(dyn)
-            pars.append(wf.parents)
-    k_max = max(p.shape[1] for p in pars)
-    parents = np.full((n_replicas, n_tasks, k_max), -1, np.int32)
-    for r, p in enumerate(pars):
-        parents[r, :, :p.shape[1]] = p
-    stack = lambda trees: jax.tree.map(
-        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees)
-    return (stack(tts), jnp.asarray(np.stack(mts), jnp.int32),
-            stack(tabs), jnp.asarray(pids, jnp.int32), stack(dyns),
-            jnp.asarray(parents))
+    spec = ExperimentSpec(
+        n_replicas, FleetAxis(n_machines, n_machine_types),
+        WorkloadAxis(n_tasks, n_task_types, shapes=tuple(shapes)),
+        scenario=ScenarioAxis(tuple(fail_rates), tuple(dvfs_states),
+                              spot_frac, mttr, n_intervals),
+        policy=PolicyAxis(tuple(policies)), seed=seed)
+    return normalize(spec).legacy()
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded artifacts (dry-run / AOT lowering)
+# ---------------------------------------------------------------------------
 @dataclass
 class SimSweepArtifacts:
     jitted: Any
@@ -458,17 +342,23 @@ def build_sharded_sweep(mesh, n_replicas: int, n_tasks: int,
                         abstract: bool = False) -> SimSweepArtifacts:
     """Shard the replica axis over every mesh axis (pod x data x model).
 
-    With ``scenarios=True`` the sweep carries a stacked
-    ``MachineDynamics`` input (failure traces + DVFS states) — the
-    scenario axis shards exactly like the workload/policy axes."""
-    sweep = (build_scenario_sweep if scenarios else build_sim_sweep)(
-        n_tasks, n_machines, params)
-    axes = tuple(mesh.axis_names)
-    rspec = PS(axes)           # replicas over all axes jointly
-    ns = NamedSharding(mesh, rspec)
-    n_dev = 1
-    for a in mesh.axis_names:
-        n_dev *= mesh.shape[a]
+    AOT-lowering companion of ``experiment.run_experiment(mesh=...)``:
+    returns an explicitly ``in_shardings``-pinned jitted sweep plus
+    matching (possibly abstract) inputs, so the dry-run can lower and
+    cost-model the pod program without devices.  With ``scenarios=True``
+    the sweep carries a stacked ``MachineDynamics`` input."""
+    from repro.launch.mesh import mesh_device_count, replica_sharding
+    fn = compile_sweep(params)
+
+    if scenarios:
+        def sweep(tt, mt, tb, pid, dyn):
+            return fn(tt, mt, tb, pid, dyn, None, None)
+    else:
+        def sweep(tt, mt, tb, pid):
+            return fn(tt, mt, tb, pid, None, None, None)
+
+    ns = replica_sharding(mesh)
+    n_dev = mesh_device_count(mesh)
     if n_replicas % n_dev:
         raise ValueError(f"n_replicas {n_replicas} must divide over "
                          f"{n_dev} devices")
@@ -511,12 +401,17 @@ def build_sharded_sweep(mesh, n_replicas: int, n_tasks: int,
                                           jnp.bool_),
             )
             inputs = inputs + (dyn,)
-    elif scenarios:
-        inputs = make_scenario_replicas(n_replicas, n_tasks, n_machines,
-                                        n_task_types, n_machine_types,
-                                        n_intervals=n_intervals)
     else:
-        inputs = make_replicas(n_replicas, n_tasks, n_machines,
-                               n_task_types, n_machine_types)
+        spec = ExperimentSpec(
+            n_replicas, FleetAxis(n_machines, n_machine_types),
+            WorkloadAxis(n_tasks, n_task_types),
+            scenario=(ScenarioAxis((0.0, 0.05, 0.2),
+                                   ("nominal", "powersave"),
+                                   spot_frac=0.5, n_intervals=n_intervals)
+                      if scenarios else None),
+            policy=PolicyAxis(("mct", "minmin", "ee_mct") if scenarios
+                              else ("fcfs", "met", "mct", "minmin",
+                                    "ee_mct")))
+        inputs = normalize(spec).legacy()
     return SimSweepArtifacts(jitted=jitted, inputs=inputs,
                              n_replicas=n_replicas)

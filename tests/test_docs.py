@@ -103,6 +103,7 @@ def test_relative_markdown_links_resolve():
 def test_required_docs_pages_exist():
     """The documentation layer this repo promises (README links these)."""
     for page in ("docs/index.md", "docs/architecture.md",
+                 "docs/experiments.md",
                  "docs/visualization.md", "docs/scenarios.md",
                  "docs/adding_a_scheduler.md", "docs/workflows.md",
                  "docs/learned_scheduling.md"):

@@ -94,11 +94,61 @@ def test_masked_argmin_empty_mask():
     assert float(vmin) >= 1e29       # BIG sentinel: "nothing schedulable"
 
 
+def test_masked_argmin_empty_mask_with_padded_tail():
+    """Empty mask AND a ragged tail (N % block_n != 0): neither the
+    masked-out rows nor the pad rows may leak into the reduction."""
+    vals = -jnp.ones((33, 4))        # negative: any leak would win
+    mask = jnp.zeros((33, 4), bool)
+    _, vmin = ops.masked_argmin(vals, mask, block_n=16, interpret=True)
+    assert float(vmin) >= 1e29
+
+
 def test_masked_argmin_ties_lowest_flat_index():
     vals = jnp.zeros((64, 4))
     mask = jnp.ones((64, 4), bool)
     idx, _ = ops.masked_argmin(vals, mask, block_n=16, interpret=True)
     assert int(idx) == 0
+
+
+@pytest.mark.parametrize("n,bn", [(33, 16), (100, 32), (257, 256)])
+def test_masked_argmin_padded_tail_vs_jnp_oracle(n, bn):
+    """Ragged task dims (N % block_n != 0): the kernel pads the last
+    block with zero rows, which MUST stay masked out — all-positive
+    values make any pad leak win the argmin and fail loudly.  Oracle is
+    plain ``jnp.argmin`` over the BIG-masked matrix (the exact reduction
+    the MCT/Min-Min schedulers perform)."""
+    key = jax.random.PRNGKey(7 * n + bn)
+    vals = jax.random.uniform(key, (n, 5), jnp.float32, 1.0, 2.0)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(n - bn), 0.5, (n, 5))
+    idx, vmin = ops.masked_argmin(vals, mask, block_n=bn, interpret=True)
+    masked = jnp.where(mask, vals, jnp.float32(1e30))
+    want_idx = int(jnp.argmin(masked))
+    assert int(idx) == want_idx
+    np.testing.assert_allclose(float(vmin),
+                               float(masked.reshape(-1)[want_idx]),
+                               rtol=1e-6)
+
+
+def test_masked_argmin_min_in_tail_block():
+    """The global minimum sits in the ragged final block's valid rows —
+    the carried (min, argmin) SMEM scratch must be updated by the last
+    grid step, not just initialized by the first."""
+    vals = jnp.full((70, 3), 5.0).at[69, 2].set(0.5)
+    mask = jnp.ones((70, 3), bool)
+    idx, vmin = ops.masked_argmin(vals, mask, block_n=32, interpret=True)
+    assert int(idx) == 69 * 3 + 2
+    assert float(vmin) == 0.5
+
+
+def test_masked_argmin_sched_shapes_vs_jnp_oracle():
+    """The (tasks x machines) shapes the batch policies would feed the
+    kernel once it is plugged in (lcap*M head slots x M machines)."""
+    for n, m in ((4 * 16, 16), (4 * 64, 64), (8 * 24, 24)):
+        key = jax.random.PRNGKey(n + m)
+        vals = jax.random.uniform(key, (n, m), jnp.float32, 0.1, 9.0)
+        mask = jax.random.bernoulli(jax.random.PRNGKey(m), 0.7, (n, m))
+        idx, _ = ops.masked_argmin(vals, mask, interpret=True)
+        assert int(idx) == int(jnp.argmin(jnp.where(mask, vals, 1e30)))
 
 
 # ---------------------------------------------------------------------------
