@@ -11,7 +11,11 @@ the vectorized engine makes *simulated* studies cheap at scale:
   ...
   T8. the ExperimentSpec executable cache works: building + running a
       SECOND same-shape spec skips retracing entirely and is >= 5x
-      faster than the first (docs/experiments.md).
+      faster than the first (docs/experiments.md);
+  T9. the streaming window engine's per-task drain cost stays flat
+      (< 1.5x drift) when total traffic grows 100x at a fixed window —
+      memory and per-event cost are O(W), never O(N)
+      (docs/streaming.md).
 
 All rows run through the declarative spec pipeline (one cached
 executable per SimParams) — the same path users take.
@@ -160,6 +164,44 @@ def time_workflow_sweep(n_replicas: int) -> tuple[float, float, float]:
     return times[0], times[1], times[2]        # (chain, inert, plain)
 
 
+def time_streaming_drain(n_small: int, factor: int = 100,
+                         window: int = 64) -> tuple[float, float]:
+    """T9: streaming per-task drain cost at fixed W vs total traffic.
+
+    Times ``streaming.simulate_stream`` (warm — compile excluded) on the
+    same Poisson family at N and factor*N with the SAME window and
+    chunk.  The window engine's state is O(W), so the per-task cost must
+    not drift as N grows — the unlocking property for fleet-scale
+    traffic (ROADMAP item 1, docs/streaming.md)."""
+    from repro.core import streaming as STR
+    from repro.core.eet import synth_eet
+    from repro.core.workload import poisson_workload
+    rng = np.random.default_rng(0)
+    eet = synth_eet(4, 4, inconsistency=0.3, seed=0)
+    power = np.stack([rng.uniform(20, 60, 4), rng.uniform(80, 300, 4)],
+                     axis=1).astype(np.float32)
+    mtype = rng.integers(0, 4, 8)
+    per = []
+    for n in (n_small, n_small * factor):
+        wl = poisson_workload(n, rate=8.0, n_task_types=4,
+                              mean_eet=eet.eet.mean(1), slack=4.0,
+                              seed=1)
+
+        def go():
+            res = STR.simulate_stream(wl, eet, power, mtype,
+                                      policy="mct", window=window,
+                                      chunk=window, lcap=3)
+            jax.block_until_ready(res.ws.agg.retired)
+            assert int(res.ws.agg.retired) == n
+            return res
+
+        go()                                   # compile + warm
+        t0 = time.perf_counter()
+        go()
+        per.append((time.perf_counter() - t0) / n)
+    return per[0], per[1]
+
+
 def run(out_dir=None, smoke: bool = False) -> dict:
     # ref engine indexes tuple fields positionally; rebuild host-side
     inputs = make_replicas(2, N_TASKS, N_MACHINES, seed=0)
@@ -254,6 +296,20 @@ def run(out_dir=None, smoke: bool = False) -> dict:
                      "per_replica_ms": round(total / cache_n * 1e3, 3),
                      "replicas_per_s": round(cache_n / total, 1)})
 
+    # streaming window engine: same window, traffic x100 — the per-task
+    # drain cost must stay flat because live state is O(W), not O(N) (T9)
+    stream_n = 32 if smoke else 64
+    stream_factor = 100
+    stream_small, stream_big = time_streaming_drain(stream_n,
+                                                    stream_factor)
+    for label, n, per in (
+            ("streaming W=64", stream_n, stream_small),
+            ("streaming W=64", stream_n * stream_factor, stream_big)):
+        rows.append({"replicas": f"{n} tasks ({label})",
+                     "total_s": round(per * n, 4),
+                     "per_replica_ms": round(per * 1e3, 3),
+                     "replicas_per_s": round(1 / per, 1)})
+
     checks = {
         "T1_jit_beats_python_ref": bool(per_replica_1 < ref_per_replica),
         "T2_vmap_amortizes": bool(per_replica_big
@@ -269,6 +325,8 @@ def run(out_dir=None, smoke: bool = False) -> dict:
         "T8_experiment_cache_hits": bool(
             cache_second * 5 <= cache_first
             and cache_stats == {"hits": 1, "misses": 1}),
+        "T9_streaming_per_task_flat": bool(
+            stream_big < 1.5 * stream_small),
     }
     payload = {"rows": rows,
                "ref_per_replica_ms": round(ref_per_replica * 1e3, 2),
@@ -277,6 +335,13 @@ def run(out_dir=None, smoke: bool = False) -> dict:
                    "second_s": round(cache_second, 4),
                    "speedup": round(cache_first / cache_second, 1),
                    **cache_stats},
+               "streaming": {
+                   "window": 64,
+                   "n_small": stream_n,
+                   "n_big": stream_n * stream_factor,
+                   "per_task_small_ms": round(stream_small * 1e3, 4),
+                   "per_task_big_ms": round(stream_big * 1e3, 4),
+                   "drift": round(stream_big / stream_small, 3)},
                "checks": checks}
     save_result("bench_engine", payload, out_dir)
     print("\n## bench_engine — replica throughput "

@@ -62,6 +62,10 @@ class _Sim:
     # workflow mode (see engine._release / docs/workflows.md)
     parents: np.ndarray | None = None        # (N, K) i32, -1 padded
     rank: np.ndarray | None = None           # (N,) HEFT upward ranks
+    # streaming mode (see core/streaming.py / docs/streaming.md): at most
+    # ``window`` tasks are live at once; the rest of the stream loads in
+    # id order as slots retire.  None = dense semantics (all loaded).
+    window: int | None = None
 
     status: np.ndarray = field(init=False)
     machine: np.ndarray = field(init=False)
@@ -102,6 +106,15 @@ class _Sim:
         self.busy_until = np.zeros(m, np.float64)
         self.energy = np.zeros(m, np.float64)
         self.active_time = np.zeros(m, np.float64)
+        # streaming-window bookkeeping (all-loaded when window is None)
+        self.loaded = np.full(n, self.window is None, bool)
+        self.retired = np.zeros(n, bool)
+        self.children: dict[int, list[int]] = {}
+        if self.parents is not None:
+            for t in range(n):
+                for p in self.parents[t]:
+                    if p >= 0:
+                        self.children.setdefault(int(p), []).append(t)
 
     # ---- helpers ---------------------------------------------------------
     def exec_time(self, t: int, m: int) -> float:
@@ -139,6 +152,38 @@ class _Sim:
 
     def batch_queue(self) -> list[int]:
         return list(np.nonzero(self.status == S.IN_BATCH)[0])
+
+    # ---- streaming window (mirror of streaming._retire/_refill) ----------
+    def _retire_window(self):
+        """A slot retires when its task is terminal and — in workflow
+        mode — every child is loaded and no loaded child is still
+        NOT_ARRIVED (children read the parent's terminal status until
+        they arrive or are cascade-cancelled)."""
+        for t in range(len(self.arrival)):
+            if self.retired[t] or not self.loaded[t] \
+                    or self.status[t] < S.COMPLETED:
+                continue
+            kids = self.children.get(t, [])
+            if any(not self.loaded[c] for c in kids):
+                continue
+            if any(self.status[c] == S.NOT_ARRIVED for c in kids):
+                continue
+            self.retired[t] = True
+
+    def stream_load(self):
+        """Retire eligible slots, then load pending tasks in id order
+        while the window has room — the eager-refill rule of
+        ``streaming.run_stream`` (loaded ids are a stream prefix)."""
+        if self.window is None:
+            return
+        self._retire_window()
+        occ = int((self.loaded & ~self.retired).sum())
+        for t in range(len(self.arrival)):
+            if occ >= self.window:
+                break
+            if not self.loaded[t]:
+                self.loaded[t] = True
+                occ += 1
 
     # ---- event phases ----------------------------------------------------
     def completions(self):
@@ -224,7 +269,7 @@ class _Sim:
         while changed:
             changed = False
             for t in range(len(self.arrival)):
-                if self.status[t] != S.NOT_ARRIVED:
+                if self.status[t] != S.NOT_ARRIVED or not self.loaded[t]:
                     continue
                 if self.released(t) and self.dep_failed(t):
                     self.status[t] = S.CANCELLED
@@ -235,7 +280,7 @@ class _Sim:
             self.emit(TR.EV_CANCEL, t, -1)
 
     def arrivals(self):
-        new = np.nonzero((self.status == S.NOT_ARRIVED)
+        new = np.nonzero((self.status == S.NOT_ARRIVED) & self.loaded
                          & (self.arrival <= self.time))[0]
         new = [t for t in new if self.released(t)]
         n_in_batch = int((self.status == S.IN_BATCH).sum())
@@ -390,7 +435,8 @@ class _Sim:
     # ---- loop ------------------------------------------------------------
     def next_event(self) -> float:
         cands = []
-        waiting = np.nonzero(self.status == S.NOT_ARRIVED)[0]
+        waiting = np.nonzero((self.status == S.NOT_ARRIVED)
+                             & self.loaded)[0]
         if self.parents is None:
             na = self.arrival[waiting]
         else:
@@ -425,10 +471,13 @@ class _Sim:
                                 * len(self.mtype)
                                 + (n if self.parents is not None else 0))
         while not np.all(self.status >= S.COMPLETED) and budget > 0:
+            self.stream_load()
             t = self.next_event()
             if not np.isfinite(t):
                 break
-            self.time = t
+            # late-loaded tasks may carry past arrivals: clamp instead of
+            # running time backwards (a no-op in dense / N <= W mode)
+            self.time = max(t, self.time)
             self.completions()
             self.availability()
             self.release()
@@ -452,7 +501,7 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                  down_end=None, kill=None,
                  max_events=None, trace=False,
                  policy_params=None, parents=None,
-                 rank=None) -> RefResult:
+                 rank=None, window=None) -> RefResult:
     """Oracle run.  The ``speed``/``power_scale``/``down_*``/``kill``
     kwargs mirror ``state.MachineDynamics`` (all default to the static
     fleet).  ``trace=True`` collects the ``(time, kind, task, machine)``
@@ -463,7 +512,9 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
     policies; omitted = the engine's zero default.  ``parents``/``rank``
     mirror ``run_sim(parents=...)`` + ``StaticTables.rank`` (workflow
     mode — pass the *same* float32 ranks the engine gets, so the ``heft``
-    orderings agree bit-for-bit)."""
+    orderings agree bit-for-bit).  ``window=W`` enables the streaming
+    mirror: at most W tasks are live at once, refilled in id order as
+    slots retire — the oracle for ``streaming.run_stream`` when N > W."""
     arrival = np.asarray(arrival, np.float64)
     if noise is None:
         noise = np.ones(len(arrival))
@@ -483,5 +534,5 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                policy_params=policy_params,
                parents=None if parents is None
                else np.asarray(parents, np.int32),
-               rank=_f64(rank))
+               rank=_f64(rank), window=window)
     return sim.run(max_events)

@@ -172,6 +172,50 @@ def summarize(st: S.SimState, tables: S.StaticTables,
     return row
 
 
+def summarize_stream(result) -> dict:
+    """Flat host dict for a finished streaming run (``summarize``
+    key-for-key where the metric exists, computed from the running
+    :class:`streaming.StreamAgg` aggregates instead of an (N,) final
+    state), plus streaming-only columns: ``retired`` (tasks whose slot
+    was released), the ``missed_queue``/``missed_running`` split, and
+    ``mean_wait_s``.  Values are unrounded — streaming sums accumulate
+    in retirement order, so float metrics match the dense report to
+    tolerance, not bit-for-bit (see docs/streaming.md)."""
+    from repro.core import streaming as ST
+    dev = ST.summarize_stream_replica(result.ws, result.n_tasks,
+                                      result.dynamics)
+    dev = {k: np.asarray(v).item() for k, v in dev.items()}
+    a = result.ws.agg
+    span = max(dev["makespan"], 0.0)
+    row = {
+        "n_tasks": result.n_tasks,
+        "retired": int(a.retired),
+        "stalled": result.stalled,
+        "completed": int(dev["completed"]),
+        "cancelled": int(dev["cancelled"]),
+        "missed": int(dev["missed"]),
+        "missed_queue": int(np.asarray(a.missed_queue)),
+        "missed_running": int(np.asarray(a.missed_running)),
+        "preempted": int(dev["preempted"]),
+        "requeues": int(dev["requeues"]),
+        "completion_rate": dev["completion_rate"],
+        "availability": dev["availability"],
+        "makespan": dev["makespan"],
+        "energy_J": dev["energy"],
+        "active_energy_J": dev["active_energy"],
+        "idle_energy_J": dev["idle_energy"],
+        "energy_per_task_J": dev["energy"] / max(dev["completed"], 1),
+        "mean_response_s": dev["mean_response"],
+        "mean_wait_s": float(np.asarray(a.sum_wait))
+        / max(int(np.asarray(a.n_started)), 1),
+        "throughput": dev["completed"] / max(span, 1e-9),
+    }
+    row.update(heterogeneity(np.asarray(result.eet),
+                             np.asarray(result.mtype),
+                             np.asarray(result.ws.sim.machines.speed)))
+    return row
+
+
 def trace_table(trace_or_state) -> list[dict]:
     """Transition log from a trace (``simulate(..., trace=True)``): one
     row per lifecycle transition, in processing order — the headless

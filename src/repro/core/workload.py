@@ -207,6 +207,57 @@ ARRIVAL_GENERATORS = {
 }
 
 
+def iter_workload_chunks(w: Workload, chunk: int):
+    """Yield ``w`` as consecutive ``Workload`` slices of ``chunk`` tasks
+    (tail may be short) — the host-side view of the arrival stream the
+    streaming engine consumes (``streaming.make_stream`` packs the same
+    slices into device columns).  Order is arrival order, so
+    concatenating the chunks reproduces ``w`` exactly."""
+    chunk = int(chunk)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    for i in range(0, w.n_tasks, chunk):
+        yield Workload(w.arrival[i:i + chunk], w.type_id[i:i + chunk],
+                       w.deadline[i:i + chunk])
+
+
+def poisson_workload_chunks(n_tasks: int, chunk: int, rate: float,
+                            n_task_types: int, *,
+                            mean_eet: np.ndarray | None = None,
+                            slack: float = 3.0, slack_jitter: float = 0.5,
+                            type_probs: np.ndarray | None = None,
+                            seed: int = 0):
+    """Generate a Poisson workload chunk-by-chunk in O(chunk) memory —
+    the streaming-native arrival source for unbounded N.
+
+    Each chunk draws from an independent substream
+    (``default_rng([seed, chunk_index])``) with arrivals continuing from
+    the previous chunk's last arrival, so any prefix of the stream is
+    reproducible without generating what came before.  The process is
+    statistically identical to :func:`poisson_workload` but NOT
+    bitwise-equal to it (different draw order); streaming parity tests
+    use a dense workload split by :func:`iter_workload_chunks` instead.
+    """
+    chunk = int(chunk)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    if type_probs is None:
+        type_probs = np.full(n_task_types, 1.0 / n_task_types)
+    if mean_eet is None:
+        mean_eet = np.ones(n_task_types, np.float32)
+    t0 = 0.0
+    for ci, lo in enumerate(range(0, n_tasks, chunk)):
+        m = min(chunk, n_tasks - lo)
+        rng = np.random.default_rng([seed, ci])
+        gaps = rng.exponential(1.0 / rate, size=m)
+        arrival = (t0 + np.cumsum(gaps)).astype(np.float32)
+        t0 = float(arrival[-1])
+        type_id = rng.choice(n_task_types, size=m, p=type_probs)
+        jitter = rng.lognormal(0.0, slack_jitter, size=m)
+        deadline = arrival + slack * jitter * np.asarray(mean_eet)[type_id]
+        yield Workload(arrival, type_id, deadline.astype(np.float32))
+
+
 def register_arrival_generator(name: str, fn) -> None:
     """Register a custom arrival process as a sweep axis value.
 

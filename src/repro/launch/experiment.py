@@ -53,7 +53,8 @@ from repro.core.workload import (WORKFLOW_GENERATORS, make_scenario,
 __all__ = [
     "FleetAxis", "WorkloadAxis", "ScenarioAxis", "PolicyAxis",
     "ExperimentSpec", "Replicas", "ExperimentResult", "normalize",
-    "compile_sweep", "compile_experiment", "run_experiment",
+    "compile_sweep", "compile_stream_sweep", "compile_experiment",
+    "run_experiment", "to_streams",
     "summarize_replica", "cache_stats", "clear_cache",
 ]
 
@@ -125,12 +126,25 @@ class WorkloadAxis:
     to workflow mode (parent tables padded to the grid's widest
     in-degree, HEFT ranks precomputed, policy axis *paired* per DAG
     instance).  The two are mutually exclusive.
+
+    ``streaming=W`` runs every replica through the bounded-memory
+    streaming engine (``core/streaming.py``) with a W-slot live-task
+    window instead of the dense engine — same draws, same metrics keys,
+    per-replica memory O(W) instead of O(n_tasks).  ``stream_chunk``
+    sets the arrival-chunk granularity (results are invariant to it;
+    default ``min(n_tasks, W)``).  Streaming composes with ``arrivals``
+    and scenario axes but not with ``shapes`` (experiment-level DAG
+    cells pad parent tables across the grid, which has no bounded-window
+    equivalent yet — use ``streaming.simulate_stream`` directly for a
+    single DAG; docs/streaming.md).
     """
     n_tasks: int
     n_task_types: int = 4
     rate: float = 4.0
     arrivals: tuple[str, ...] | None = None
     shapes: tuple[str, ...] | None = None
+    streaming: int | None = None
+    stream_chunk: int | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "arrivals", _astuple(self.arrivals))
@@ -143,6 +157,21 @@ class WorkloadAxis:
             resolve_arrivals(self.arrivals)
         if self.shapes is not None:
             resolve_shapes(self.shapes)
+        if self.streaming is not None:
+            if self.shapes is not None:
+                raise ValueError(
+                    "streaming does not compose with shapes (workflow "
+                    "cells pad parent tables across the grid); run DAGs "
+                    "through streaming.simulate_stream directly")
+            if self.streaming < 1:
+                raise ValueError(f"streaming window must be >= 1, got "
+                                 f"{self.streaming}")
+        if self.stream_chunk is not None:
+            if self.streaming is None:
+                raise ValueError("stream_chunk requires streaming=W")
+            if self.stream_chunk < 1:
+                raise ValueError(f"stream_chunk must be >= 1, got "
+                                 f"{self.stream_chunk}")
 
 
 @dataclass(frozen=True)
@@ -221,6 +250,26 @@ class ExperimentSpec:
     @property
     def workflow(self) -> bool:
         return self.workload.shapes is not None
+
+    @property
+    def streaming(self) -> bool:
+        return self.workload.streaming is not None
+
+    @property
+    def stream_params(self):
+        """Effective :class:`streaming.StreamParams` (streaming specs)."""
+        from repro.core import streaming as ST
+        sp = self.sim_params
+        return ST.StreamParams(
+            window=self.workload.streaming, lcap=sp.lcap, qcap=sp.qcap,
+            cancel_infeasible=sp.cancel_infeasible,
+            max_events=sp.max_events, trace=sp.trace,
+            trace_capacity=sp.trace_capacity)
+
+    @property
+    def stream_chunk(self) -> int:
+        wk = self.workload
+        return wk.stream_chunk or max(min(wk.n_tasks, wk.streaming), 1)
 
     @property
     def scenarios(self) -> bool:
@@ -437,8 +486,81 @@ def compile_sweep(params: E.SimParams = E.SimParams()):
     return fn
 
 
+def compile_stream_sweep(params):
+    """Streaming twin of :func:`compile_sweep`: one cached vmapped
+    executable per :class:`streaming.StreamParams`, sharing
+    ``_EXEC_CACHE`` (both key types are NamedTuples, so dense and
+    streaming specs coexist in one cache and T8's re-run economics apply
+    unchanged).
+
+    Signature (leading replica axis on all but ``policy_params``)::
+
+        f(stream, mtype, eet, power, policy_ids, dynamics,
+          policy_params) -> metrics            # params.trace=False
+                         -> (metrics, traces)  # params.trace=True
+
+    ``stream`` is a :class:`streaming.TaskStream` with ``(R, nc, C)``
+    leaves (:func:`to_streams`); metrics carry the same keys as
+    :func:`summarize_replica`, computed from the running aggregates.
+    """
+    from repro.core import streaming as ST
+    fn = _EXEC_CACHE.get(params)
+    if fn is not None:
+        _CACHE_STATS["hits"] += 1
+        return fn
+    _CACHE_STATS["misses"] += 1
+
+    def one(stream, mtype, eet, power, pid, dyn, pp):
+        ws = ST.run_stream(stream, mtype, eet, power, pid, params,
+                           dyn, pp)
+        n = jnp.sum(stream.gid >= 0)
+        m = ST.summarize_stream_replica(ws, n, dyn)
+        return (m, ws.sim.trace) if params.trace else m
+
+    fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, None)))
+    _EXEC_CACHE[params] = fn
+    return fn
+
+
+def to_streams(reps: Replicas, chunk: int):
+    """Repack stacked ``(R, N)`` replica columns as ``(R, nc, C)``
+    :class:`streaming.TaskStream` columns (the batch analogue of
+    ``streaming.make_stream``; per-task noise rides in the stream, the
+    tail chunk pads with inert ``gid = -1`` rows)."""
+    from repro.core import streaming as ST
+    if reps.parents is not None:
+        raise ValueError("streaming replicas cannot carry parent tables")
+    n = int(reps.tasks.arrival.shape[1])
+    r = int(reps.tasks.arrival.shape[0])
+    chunk = int(chunk)
+    n_chunks = max(-(-n // chunk), 1)
+    total = n_chunks * chunk
+
+    def pad(x, fill):
+        x = np.asarray(x)
+        out = np.full((r, total), fill, x.dtype)
+        out[:, :n] = x
+        return jnp.asarray(out.reshape(r, n_chunks, chunk))
+
+    gid = np.full((total,), -1, np.int32)
+    gid[:n] = np.arange(n, dtype=np.int32)
+    gid = jnp.asarray(np.broadcast_to(gid.reshape(1, n_chunks, chunk),
+                                      (r, n_chunks, chunk)))
+    return ST.TaskStream(
+        arrival=pad(reps.tasks.arrival, np.inf),
+        type_id=pad(reps.tasks.type_id, 0),
+        deadline=pad(reps.tasks.deadline, np.inf),
+        noise=pad(reps.tables.noise, 1.0),
+        rank=pad(reps.tables.rank, 0.0),
+        gid=gid,
+    )
+
+
 def compile_experiment(spec: ExperimentSpec):
-    """Spec-level view of :func:`compile_sweep` (folds the trace flag)."""
+    """Spec-level view of :func:`compile_sweep` (folds the trace flag);
+    streaming specs route to :func:`compile_stream_sweep`."""
+    if spec.streaming:
+        return compile_stream_sweep(spec.stream_params)
     return compile_sweep(spec.sim_params)
 
 
@@ -499,8 +621,16 @@ def run_experiment(spec: ExperimentSpec, *, mesh=None, policy_params=None,
             raise ValueError(f"n_replicas {reps.n_replicas} must divide "
                              f"over {n_dev} devices")
         reps = jax.device_put(reps, replica_sharding(mesh))
-    out = fn(reps.tasks, reps.mtype, reps.tables, reps.policy_ids,
-             reps.dynamics, reps.parents, policy_params)
+    if spec.streaming:
+        stream = to_streams(reps, spec.stream_chunk)
+        if mesh is not None:
+            from repro.launch.mesh import replica_sharding
+            stream = jax.device_put(stream, replica_sharding(mesh))
+        out = fn(stream, reps.mtype, reps.tables.eet, reps.tables.power,
+                 reps.policy_ids, reps.dynamics, policy_params)
+    else:
+        out = fn(reps.tasks, reps.mtype, reps.tables, reps.policy_ids,
+                 reps.dynamics, reps.parents, policy_params)
     # the executable's output shape follows the EFFECTIVE params (the
     # trace flag may also arrive via sim=SimParams(trace=True))
     metrics, traces = out if spec.sim_params.trace else (out, None)

@@ -4,7 +4,42 @@
 import numpy as np
 import pytest
 
+from repro.core import schedulers as P
+from repro.core.eet import synth_eet
+from repro.core.workload import poisson_workload
+
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def make_instance(seed: int, n_tasks: int = 24, n_machines: int = 4,
+                  n_task_types: int = 3, n_machine_types: int = 2,
+                  rate: float = 3.0, slack: float = 4.0):
+    """One randomized (eet, power, workload, mtype) fleet instance — the
+    shared builder behind the engine-parity suites
+    (test_engine_vs_ref.py, test_streaming.py)."""
+    rng = np.random.default_rng(seed)
+    eet = synth_eet(n_task_types, n_machine_types, inconsistency=0.4,
+                    seed=seed)
+    power = np.stack([rng.uniform(10, 50, n_machine_types),
+                      rng.uniform(60, 200, n_machine_types)],
+                     axis=1).astype(np.float32)
+    wl = poisson_workload(n_tasks, rate=rate, n_task_types=n_task_types,
+                          mean_eet=eet.eet.mean(1), slack=slack,
+                          slack_jitter=0.6, seed=seed + 1)
+    mtype = rng.integers(0, n_machine_types, n_machines)
+    return eet, power, wl, mtype
+
+
+@pytest.fixture
+def small_fleet():
+    """The canonical seed-42 parity instance (24 tasks, 4 machines)."""
+    return make_instance(42)
+
+
+@pytest.fixture(params=sorted(P.SCHEDULERS))
+def policy_id(request):
+    """Every registered scheduling policy, one test instance each."""
+    return request.param

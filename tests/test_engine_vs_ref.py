@@ -10,31 +10,14 @@ from __future__ import annotations
 import numpy as np
 import pytest
 from _hyp import given, settings, st  # hypothesis optional (dev extra)
+from conftest import make_instance  # shared fleet builder (conftest.py)
 
 from repro.core import engine as E
 from repro.core import ref_engine as R
 from repro.core import schedulers as P
 from repro.core import state as S
-from repro.core.eet import EETTable, synth_eet
-from repro.core.workload import Workload, poisson_workload
 
 POLICIES = list(P.SCHEDULERS)
-
-
-def make_instance(seed: int, n_tasks: int, n_machines: int,
-                  n_task_types: int, n_machine_types: int,
-                  rate: float, slack: float):
-    rng = np.random.default_rng(seed)
-    eet = synth_eet(n_task_types, n_machine_types, inconsistency=0.4,
-                    seed=seed)
-    power = np.stack([rng.uniform(10, 50, n_machine_types),
-                      rng.uniform(60, 200, n_machine_types)],
-                     axis=1).astype(np.float32)
-    wl = poisson_workload(n_tasks, rate=rate, n_task_types=n_task_types,
-                          mean_eet=eet.eet.mean(1), slack=slack,
-                          slack_jitter=0.6, seed=seed + 1)
-    mtype = rng.integers(0, n_machine_types, n_machines)
-    return eet, power, wl, mtype
 
 
 def run_both(eet, power, wl, mtype, policy, lcap=3, qcap=1 << 30,
@@ -65,12 +48,10 @@ def assert_equivalent(st_jax, ref, context=""):
         atol=1e-2, err_msg=f"energy mismatch {context}")
 
 
-@pytest.mark.parametrize("policy", POLICIES)
-def test_engine_matches_ref_fixed(policy):
-    eet, power, wl, mtype = make_instance(42, 24, 4, 3, 2, rate=3.0,
-                                          slack=4.0)
-    st_jax, ref = run_both(eet, power, wl, mtype, policy)
-    assert_equivalent(st_jax, ref, f"policy={policy}")
+def test_engine_matches_ref_fixed(small_fleet, policy_id):
+    eet, power, wl, mtype = small_fleet
+    st_jax, ref = run_both(eet, power, wl, mtype, policy_id)
+    assert_equivalent(st_jax, ref, f"policy={policy_id}")
 
 
 @settings(max_examples=30, deadline=None)

@@ -1,0 +1,340 @@
+"""Parity/property battery for the streaming live-task window engine.
+
+The claim ``core/streaming.py`` makes (and this suite locks down): the
+bounded-memory window engine is a *semantics-preserving* restructuring
+of the dense event loop —
+
+* for N <= W it is final-state **bitwise** identical to
+  ``engine.simulate`` (statuses, machines, start/end times, energy,
+  trace stream, summary metrics) for every policy, across static,
+  failure/DVFS/spot and workflow instances;
+* for N > W it matches the plain-Python streaming reference mirror
+  (``simulate_ref(window=W)``) event-for-event;
+* results are independent of the chunk size and of W (for any W that
+  covers the instance's concurrent liveness), memory stays O(W), event
+  times are monotone across refills, and no slot leaks or is recycled
+  while live.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis optional (dev extra)
+from conftest import make_instance  # shared fleet builder (conftest.py)
+
+from repro.core import engine as E
+from repro.core import ref_engine as R
+from repro.core import report as REP
+from repro.core import schedulers as P
+from repro.core import state as S
+from repro.core import streaming as ST
+from repro.core import trace as T
+from repro.core.workload import (chain_workflow, fork_join_workflow,
+                                 iter_workload_chunks, make_scenario,
+                                 poisson_workload_chunks)
+
+pytestmark = pytest.mark.streaming
+
+POLICIES = list(P.SCHEDULERS)
+
+
+def assert_stream_equals_dense(res: ST.StreamResult, dense: S.SimState,
+                               context: str = ""):
+    """Bitwise final-state parity (valid whenever N <= window)."""
+    rs = res.resident_state()
+    n = dense.tasks.status.shape[0]
+    assert rs.tasks.status.shape[0] == n, context
+    for col in ("status", "machine", "seq", "t_start", "t_end"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rs.tasks, col)),
+            np.asarray(getattr(dense.tasks, col)),
+            err_msg=f"{col} mismatch {context}")
+    np.testing.assert_array_equal(
+        np.asarray(res.machines.energy),
+        np.asarray(dense.machines.energy),
+        err_msg=f"energy mismatch {context}")
+    np.testing.assert_array_equal(
+        np.asarray(res.machines.active_time),
+        np.asarray(dense.machines.active_time),
+        err_msg=f"active_time mismatch {context}")
+    assert int(res.agg.retired) == n, context
+    assert not res.stalled, context
+
+
+def jit_rows(trace_buf) -> list[tuple]:
+    ev = T.events(trace_buf)
+    return list(zip(ev["time"].tolist(), ev["kind"].tolist(),
+                    ev["task"].tolist(), ev["machine"].tolist()))
+
+
+def assert_trace_streams_equal(rows_a, rows_b, context=""):
+    assert len(rows_a) == len(rows_b), (
+        f"row count {context}: {len(rows_a)} vs {len(rows_b)}")
+    for i, (a, b) in enumerate(zip(rows_a, rows_b)):
+        assert a[1:] == b[1:], f"row {i} {context}: {a} vs {b}"
+        assert abs(a[0] - b[0]) < 1e-3, f"row {i} time {context}: {a} {b}"
+
+
+# ---------------------------------------------------------------------------
+# N <= W: bitwise parity against the dense engine
+# ---------------------------------------------------------------------------
+def test_parity_every_policy(small_fleet, policy_id):
+    eet, power, wl, mtype = small_fleet
+    dense = E.simulate(wl, eet, power, mtype, policy=policy_id, lcap=3)
+    res = ST.simulate_stream(wl, eet, power, mtype, policy=policy_id,
+                             window=32, chunk=8, lcap=3)
+    assert_stream_equals_dense(res, dense, f"policy={policy_id}")
+
+
+def test_metric_parity(small_fleet):
+    """Streaming aggregation reproduces every report.summarize metric."""
+    eet, power, wl, mtype = small_fleet
+    dense = E.simulate(wl, eet, power, mtype, policy="mct", lcap=3)
+    tables = E.make_tables(eet, power, wl.n_tasks)
+    want = REP.summarize(dense, tables)
+    got = ST.simulate_stream(wl, eet, power, mtype, policy="mct",
+                             window=32, chunk=8, lcap=3).summarize()
+    for k, v in want.items():
+        np.testing.assert_allclose(
+            got[k], v, rtol=1e-4, atol=1e-3,
+            err_msg=f"summarize key {k}")
+    assert got["retired"] == wl.n_tasks and not got["stalled"]
+
+
+@pytest.mark.parametrize("scenario", ["failures", "spot", "dvfs"])
+@pytest.mark.parametrize("policy", ["mct", "ee_mct"])
+def test_parity_dynamic_scenarios(scenario, policy):
+    eet, power, wl, mtype = make_instance(11, n_tasks=20, n_machines=3)
+    kw = {"failures": dict(fail_rate=0.25, spot=False),
+          "spot": dict(fail_rate=0.3, spot=True),
+          "dvfs": dict(fail_rate=0.0, dvfs="powersave")}[scenario]
+    dyn = make_scenario(wl, 3, mttr=2.0, n_intervals=3, seed=13,
+                        **kw).dynamics()
+    dense = E.simulate(wl, eet, power, mtype, policy=policy, lcap=3,
+                       dynamics=dyn)
+    res = ST.simulate_stream(wl, eet, power, mtype, policy=policy,
+                             window=24, chunk=6, lcap=3, dynamics=dyn)
+    assert_stream_equals_dense(res, dense, f"{scenario}/{policy}")
+
+
+@pytest.mark.parametrize("policy", ["heft", "mct"])
+@pytest.mark.parametrize("shape", ["chain", "fork_join"])
+def test_parity_workflows(shape, policy):
+    eet, power, _, mtype = make_instance(17, n_tasks=16)
+    if shape == "chain":
+        wf = chain_workflow(12, 3, mean_eet=eet.eet.mean(1),
+                            slack_jitter=0.4, seed=19)
+    else:
+        wf = fork_join_workflow(5, 2, 3, mean_eet=eet.eet.mean(1),
+                                slack_jitter=0.4, seed=19)
+    dense = E.simulate(wf, eet, power, mtype, policy=policy, lcap=3)
+    res = ST.simulate_stream(wf, eet, power, mtype, policy=policy,
+                             window=32, chunk=4, lcap=3)
+    assert_stream_equals_dense(res, dense, f"{shape}/{policy}")
+
+
+def test_trace_parity(small_fleet):
+    """Globalized trace rows and fleet snapshots match the dense trace."""
+    eet, power, wl, mtype = small_fleet
+    dense = E.simulate(wl, eet, power, mtype, policy="mct", lcap=3,
+                       trace=True)
+    res = ST.simulate_stream(wl, eet, power, mtype, policy="mct",
+                             window=32, chunk=8, lcap=3, trace=True)
+    assert_trace_streams_equal(jit_rows(res.trace), jit_rows(dense.trace),
+                               "N<=W")
+    ne = int(dense.n_events)
+    assert res.n_events == ne
+    sa = T.snapshots(res.trace, res.n_events)
+    sb = T.snapshots(dense.trace, ne)
+    np.testing.assert_allclose(sa["time"], sb["time"], atol=1e-4)
+    np.testing.assert_array_equal(sa["running"], sb["running"])
+
+
+# ---------------------------------------------------------------------------
+# N > W: overflow windows against the streaming reference mirror
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["fcfs", "mct", "minmin"])
+def test_overflow_matches_ref_mirror(policy):
+    eet, power, wl, mtype = make_instance(7, n_tasks=60, rate=5.0)
+    res = ST.simulate_stream(wl, eet, power, mtype, policy=policy,
+                             window=6, chunk=7, lcap=3, trace=True)
+    ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
+                         power, mtype, policy=policy, lcap=3, trace=True,
+                         window=6)
+    s = res.summarize()
+    assert s["retired"] == 60 and not res.stalled
+    assert s["completed"] == int((ref.status == S.COMPLETED).sum())
+    assert s["cancelled"] == int((ref.status == S.CANCELLED).sum())
+    assert s["missed"] == int(np.isin(ref.status,
+                                      (S.MISSED_QUEUE,
+                                       S.MISSED_RUNNING)).sum())
+    np.testing.assert_allclose(s["makespan"], ref.makespan, rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_allclose(s["active_energy_J"],
+                               ref.active_energy.sum(), rtol=1e-4,
+                               atol=1e-2)
+    assert_trace_streams_equal(jit_rows(res.trace), ref.trace,
+                               f"overflow/{policy}")
+
+
+def test_overflow_workflow_matches_ref_mirror():
+    eet, power, _, mtype = make_instance(7)
+    wf = chain_workflow(30, 3, mean_eet=eet.eet.mean(1),
+                        slack_jitter=0.4, seed=9)
+    wl = wf.workload
+    res = ST.simulate_stream(wf, eet, power, mtype, policy="heft",
+                             window=6, chunk=5, lcap=3)
+    ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
+                         power, mtype, policy="heft", lcap=3,
+                         parents=wf.parents,
+                         rank=wf.ranks(eet.eet.mean(1)), window=6)
+    s = res.summarize()
+    assert s["retired"] == wl.n_tasks and not res.stalled
+    assert s["completed"] == int((ref.status == S.COMPLETED).sum())
+    np.testing.assert_allclose(s["makespan"], ref.makespan, rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_frontier_overflow_stalls_cleanly():
+    """A DAG whose dependency frontier exceeds W stops with the stalled
+    flag (instead of deadlocking or burning the event budget), and the
+    ref mirror strands the same unloadable tasks."""
+    eet, power, _, mtype = make_instance(7)
+    wf = fork_join_workflow(6, 1, 3, mean_eet=eet.eet.mean(1), seed=10)
+    wl = wf.workload
+    w = ST.min_window(wf.parents) - 4   # join in-degree is 6 -> too small
+    res = ST.simulate_stream(wf, eet, power, mtype, policy="heft",
+                             window=w, chunk=5, lcap=3)
+    assert res.stalled and int(res.agg.retired) < wl.n_tasks
+    assert res.n_events < 4 * wl.n_tasks        # stopped, not burned out
+    ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
+                         power, mtype, policy="heft", lcap=3,
+                         parents=wf.parents,
+                         rank=wf.ranks(eet.eet.mean(1)), window=w)
+    assert int((ref.status == S.NOT_ARRIVED).sum()) > 0
+    # a big-enough window clears the stall
+    res2 = ST.simulate_stream(wf, eet, power, mtype, policy="heft",
+                              window=ST.min_window(wf.parents) + 5,
+                              chunk=5, lcap=3)
+    assert not res2.stalled
+
+
+# ---------------------------------------------------------------------------
+# Window invariants
+# ---------------------------------------------------------------------------
+def test_memory_bounded_by_window():
+    """N = 100*W tasks drain through W-shaped buffers (the acceptance
+    criterion: per-task state never materializes at size N)."""
+    w, n = 8, 800
+    eet, power, wl, mtype = make_instance(5, n_tasks=n, rate=8.0)
+    res = ST.simulate_stream(wl, eet, power, mtype, policy="mct",
+                             window=w, chunk=64, lcap=3)
+    st = res.ws.sim
+    for col in ("arrival", "type_id", "deadline", "status", "machine",
+                "seq", "t_start", "t_end"):
+        assert getattr(st.tasks, col).shape == (w,), col
+    assert res.ws.slot_task.shape == (w,)
+    assert res.ws.retired.shape == (w,)
+    assert res.ws.wtab.noise.shape == (w,)
+    a = res.summarize()
+    assert a["retired"] == n and not res.stalled
+    assert (a["completed"] + a["cancelled"] + a["missed"]
+            + a["preempted"]) == n
+
+
+def test_chunked_generators_reassemble():
+    """iter_workload_chunks slices losslessly; poisson_workload_chunks
+    is prefix-reproducible across chunk sizes."""
+    _, _, wl, _ = make_instance(3, n_tasks=23)
+    parts = list(iter_workload_chunks(wl, 5))
+    assert [p.n_tasks for p in parts] == [5, 5, 5, 5, 3]
+    np.testing.assert_array_equal(
+        np.concatenate([p.arrival for p in parts]), wl.arrival)
+    np.testing.assert_array_equal(
+        np.concatenate([p.type_id for p in parts]), wl.type_id)
+    a = list(poisson_workload_chunks(20, 6, 4.0, 3, seed=2))
+    b = list(poisson_workload_chunks(20, 6, 4.0, 3, seed=2))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.arrival, y.arrival)
+    arr = np.concatenate([c.arrival for c in a])
+    assert arr.shape == (20,) and np.all(np.diff(arr) > 0)
+
+
+CHUNKS = [1, 4, 9, 30]
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), rate=st.floats(1.0, 10.0),
+       chunk=st.sampled_from(CHUNKS),
+       policy=st.sampled_from(["fcfs", "mct", "minmin"]))
+def test_property_chunk_size_invariance(seed, rate, chunk, policy):
+    """Per-task results are independent of the stream granularity."""
+    eet, power, wl, mtype = make_instance(seed, n_tasks=30, rate=rate)
+    a = ST.simulate_stream(wl, eet, power, mtype, policy=policy,
+                           window=7, chunk=chunk, lcap=3)
+    b = ST.simulate_stream(wl, eet, power, mtype, policy=policy,
+                           window=7, chunk=30, lcap=3)
+    for f in ST.StreamAgg._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.agg, f)), np.asarray(getattr(b.agg, f)),
+            err_msg=f"agg.{f} chunk={chunk} seed={seed}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), w=st.sampled_from([30, 37, 64]),
+       policy=st.sampled_from(["fcfs", "mct", "heft"]))
+def test_property_window_size_invariance(seed, w, policy):
+    """Any W >= the concurrent liveness (here W >= N) gives the dense
+    result, slot count notwithstanding."""
+    eet, power, wl, mtype = make_instance(seed, n_tasks=30, rate=4.0)
+    dense = E.simulate(wl, eet, power, mtype, policy=policy, lcap=3)
+    res = ST.simulate_stream(wl, eet, power, mtype, policy=policy,
+                             window=w, chunk=10, lcap=3)
+    assert_stream_equals_dense(res, dense, f"W={w} seed={seed}")
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), rate=st.floats(2.0, 12.0),
+       policy=st.sampled_from(["fcfs", "mct", "minmin"]))
+def test_property_no_slot_leak(seed, rate, policy):
+    """Every task retires exactly once: the category counts partition N,
+    all slots end retired, and the makespan equals the ref mirror's."""
+    eet, power, wl, mtype = make_instance(seed, n_tasks=40, rate=rate)
+    res = ST.simulate_stream(wl, eet, power, mtype, policy=policy,
+                             window=5, chunk=8, lcap=3)
+    a = res.agg
+    assert int(a.retired) == 40
+    assert (int(a.completed) + int(a.cancelled) + int(a.missed_queue)
+            + int(a.missed_running) + int(a.preempted)) == 40
+    assert bool(np.all(np.asarray(res.ws.retired)))
+    ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
+                         power, mtype, policy=policy, lcap=3, window=5)
+    assert int(a.completed) == int((ref.status == S.COMPLETED).sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["fcfs", "mct"]))
+def test_property_monotone_events_and_no_live_recycling(seed, policy):
+    """Across refills: event times never decrease, and the per-machine
+    event stream alternates start/stop correctly — a slot recycled
+    while RUNNING would break the alternation with a phantom start."""
+    eet, power, wl, mtype = make_instance(seed, n_tasks=60, rate=5.0)
+    res = ST.simulate_stream(wl, eet, power, mtype, policy=policy,
+                             window=6, chunk=7, lcap=3, trace=True)
+    snaps = T.snapshots(res.trace, res.n_events)
+    times = snaps["time"]
+    assert np.all(np.diff(times) >= 0), "event clock ran backwards"
+    assert np.all(np.isfinite(times)), "stall burned events"
+    rows = jit_rows(res.trace)
+    running: dict[int, int] = {}
+    for t, kind, task, m in rows:
+        if kind == T.EV_START:
+            assert running.get(m) is None, \
+                f"machine {m} started task {task} over task {running[m]}"
+            running[m] = task
+        elif kind in (T.EV_COMPLETE, T.EV_MISS_RUNNING, T.EV_PREEMPT):
+            assert running.get(m) == task, \
+                f"machine {m} stopped {task}, had {running.get(m)}"
+            running[m] = None
+    assert int(res.agg.retired) == 60
