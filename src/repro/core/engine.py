@@ -76,6 +76,9 @@ class SimParams(NamedTuple):
     max_events: int | None = None
     trace: bool = False           # record TraceBuffer (docs/visualization.md)
     trace_capacity: int | None = None   # rows; default row_capacity_bound
+    pallas: bool = False          # fused dispatch kernels (docs/kernels.md);
+    #                               bitwise-identical results, off compiles
+    #                               the identical pre-kernel HLO
 
 
 # --------------------------------------------------------------------------
@@ -335,7 +338,8 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
     def body(c):
         s, _, iters = c
         dec = P.dispatch(policy_id, s, tb, params.lcap,
-                         params.cancel_infeasible, const, up, pparams)
+                         params.cancel_infeasible, const, up, pparams,
+                         pallas=params.pallas)
         s = _apply_decision(s, dec)
         return s, dec.task >= 0, iters + 1
 
@@ -523,7 +527,8 @@ def simulate(workload, eet: EETTable, power: np.ndarray,
              dynamics: S.MachineDynamics | None = None,
              trace: bool = False,
              trace_capacity: int | None = None,
-             policy_params: NN.PolicyParams | None = None) -> S.SimState:
+             policy_params: NN.PolicyParams | None = None,
+             pallas: bool = False) -> S.SimState:
     """Host-friendly wrapper: one replica, named policy.
 
     ``workload`` is a ``workload.Workload`` (independent tasks) or a
@@ -537,6 +542,8 @@ def simulate(workload, eet: EETTable, power: np.ndarray,
     stream + fleet snapshots behind ``core/viz.py`` (see
     docs/visualization.md).  ``policy_params`` supplies learned-policy
     weights for the ``mlp``/``linear`` policies (docs/learned_scheduling.md).
+    ``pallas=True`` routes the scheduler drain through the fused Pallas
+    dispatch kernels — bitwise-identical results (docs/kernels.md).
     """
     from repro.core.workload import Workflow
     parents = rank = None
@@ -547,7 +554,7 @@ def simulate(workload, eet: EETTable, power: np.ndarray,
         workload = workload.workload
     params = SimParams(lcap=lcap, qcap=qcap or (1 << 30),
                        cancel_infeasible=cancel_infeasible, trace=trace,
-                       trace_capacity=trace_capacity)
+                       trace_capacity=trace_capacity, pallas=pallas)
     tables = make_tables(eet, power, workload.n_tasks, noise=noise,
                          rank=rank)
     mtype = jnp.asarray(np.asarray(machine_types, np.int32))

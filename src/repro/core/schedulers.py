@@ -36,12 +36,14 @@ selected task's deadline, the task is cancelled instead of mapped.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import state as S
+from repro.kernels import sched_argmin as K
 
 
 class Decision(NamedTuple):
@@ -114,16 +116,33 @@ def build_view(state: S.SimState, tables: S.StaticTables,
                      head, room.any(), tables.rank)
 
 
-def _pick_machine(view: SchedView, scores: jnp.ndarray) -> jnp.ndarray:
+def _kernel_argmin(scores: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """(M,) masked argmin through the Pallas kernel (docs/kernels.md).
+
+    The kernel's contract is exact-``jnp.argmin`` tie-breaking with a -1
+    sentinel on an empty mask, so substituting it for the jnp expression
+    is bitwise invisible wherever the empty case is gated off anyway.
+    """
+    m, _ = K.masked_argmin(scores[None, :], mask[None, :],
+                           interpret=K.default_interpret())
+    return m.astype(jnp.int32)
+
+
+def _pick_machine(view: SchedView, scores: jnp.ndarray, *,
+                  kernel: bool = False) -> jnp.ndarray:
     """argmin of (M,) scores over machines with room; -1 if none."""
-    masked = jnp.where(view.room, scores, BIG)
-    m = jnp.argmin(masked).astype(jnp.int32)
+    if kernel:
+        m = _kernel_argmin(scores, view.room)
+    else:
+        masked = jnp.where(view.room, scores, BIG)
+        m = jnp.argmin(masked).astype(jnp.int32)
     return jnp.where(view.any_room, m, -1)
 
 
-def _head_decision(view: SchedView, scores_m: jnp.ndarray) -> Decision:
+def _head_decision(view: SchedView, scores_m: jnp.ndarray, *,
+                   kernel: bool = False) -> Decision:
     ok = (view.head >= 0) & view.any_room
-    m = _pick_machine(view, scores_m)
+    m = _pick_machine(view, scores_m, kernel=kernel)
     return Decision(jnp.where(ok, view.head, -1).astype(jnp.int32),
                     jnp.where(ok, m, -1).astype(jnp.int32),
                     jnp.bool_(False))
@@ -132,8 +151,9 @@ def _head_decision(view: SchedView, scores_m: jnp.ndarray) -> Decision:
 # --------------------------------------------------------------------------
 # Immediate policies
 # --------------------------------------------------------------------------
-def fcfs(state, tables, view: SchedView, rr_ptr, params) -> Decision:
-    return _head_decision(view, view.avail)
+def fcfs(state, tables, view: SchedView, rr_ptr, params, *,
+         kernel: bool = False) -> Decision:
+    return _head_decision(view, view.avail, kernel=kernel)
 
 
 def round_robin(state, tables, view: SchedView, rr_ptr, params) -> Decision:
@@ -148,23 +168,27 @@ def round_robin(state, tables, view: SchedView, rr_ptr, params) -> Decision:
                     jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
 
 
-def met(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+def met(state, tables, view: SchedView, rr_ptr, params, *,
+        kernel: bool = False) -> Decision:
     scores = jnp.where(view.head >= 0, view.eet_nm[view.head], BIG)
-    return _head_decision(view, scores)
+    return _head_decision(view, scores, kernel=kernel)
 
 
-def mct(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+def mct(state, tables, view: SchedView, rr_ptr, params, *,
+        kernel: bool = False) -> Decision:
     scores = jnp.where(view.head >= 0,
                        view.completion_row(view.head), BIG)
-    return _head_decision(view, scores)
+    return _head_decision(view, scores, kernel=kernel)
 
 
-def ee_met(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+def ee_met(state, tables, view: SchedView, rr_ptr, params, *,
+           kernel: bool = False) -> Decision:
     scores = jnp.where(view.head >= 0, view.energy_nm[view.head], BIG)
-    return _head_decision(view, scores)
+    return _head_decision(view, scores, kernel=kernel)
 
 
-def ee_mct(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+def ee_mct(state, tables, view: SchedView, rr_ptr, params, *,
+           kernel: bool = False) -> Decision:
     """Min energy among deadline-feasible machines, else min completion."""
     h = jnp.maximum(view.head, 0)
     dl = state.tasks.deadline[h]
@@ -174,7 +198,11 @@ def ee_mct(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     fallback = jnp.where(view.room, crow, BIG)
     scores = jnp.where(feasible.any(), energy, fallback)
     ok = (view.head >= 0) & view.any_room
-    m = jnp.argmin(scores).astype(jnp.int32)
+    if kernel:
+        # scores already fold the feasibility/room masking -> all-True mask
+        m = _kernel_argmin(scores, jnp.ones_like(view.room))
+    else:
+        m = jnp.argmin(scores).astype(jnp.int32)
     return Decision(jnp.where(ok, view.head, -1).astype(jnp.int32),
                     jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
 
@@ -210,7 +238,8 @@ def maxmin(state, tables, view: SchedView, rr_ptr, params) -> Decision:
                     jnp.bool_(False))
 
 
-def heft(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+def heft(state, tables, view: SchedView, rr_ptr, params, *,
+         kernel: bool = False) -> Decision:
     """HEFT-style list scheduling (Topcuoglu et al.): pick the queued task
     with the highest *upward rank* (critical-path length from the task to
     a DAG exit, precomputed host-side by ``workload.upward_ranks`` and
@@ -221,17 +250,58 @@ def heft(state, tables, view: SchedView, rr_ptr, params) -> Decision:
     score = jnp.where(view.in_batch, view.rank, -BIG)
     t = jnp.argmax(score).astype(jnp.int32)
     ok = view.in_batch.any() & view.any_room
-    m = _pick_machine(view, view.completion_row(t))
+    m = _pick_machine(view, view.completion_row(t), kernel=kernel)
     return Decision(jnp.where(ok, t, -1).astype(jnp.int32),
                     jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
 
 
-def edf_mct(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+def edf_mct(state, tables, view: SchedView, rr_ptr, params, *,
+            kernel: bool = False) -> Decision:
     dl = jnp.where(view.in_batch, state.tasks.deadline, BIG)
     t = jnp.argmin(dl).astype(jnp.int32)
     ok = view.in_batch.any() & view.any_room
     scores = view.completion_row(t)
-    m = _pick_machine(view, scores)
+    m = _pick_machine(view, scores, kernel=kernel)
+    return Decision(jnp.where(ok, t, -1).astype(jnp.int32),
+                    jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
+
+
+# --------------------------------------------------------------------------
+# Fused Pallas variants (docs/kernels.md)
+# --------------------------------------------------------------------------
+def _scaled_eet_table(state, tables) -> jnp.ndarray:
+    """(T, M) DVFS/speed-scaled EET table for the fused kernels.
+
+    ``(eet[:, mtype] / speed)[type_id]`` is elementwise the same float
+    division as the engine's hoisted ``eet_nm`` gather, so the fused path
+    sees bitwise-identical completion times without the (N, M) matrix.
+    """
+    return tables.eet[:, state.machines.mtype] / state.machines.speed[None, :]
+
+
+def minmin_pallas(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+    """`minmin` with the mask + gather + completion + argmin fused into
+    one Pallas kernel — nothing O(N·M) is materialized."""
+    flat, _ = K.fused_minmin(view.avail, view.in_batch, view.room,
+                             state.tasks.type_id,
+                             _scaled_eet_table(state, tables),
+                             interpret=K.default_interpret())
+    n_m = view.room.shape[0]
+    f = jnp.maximum(flat, 0)
+    ok = view.in_batch.any() & view.any_room
+    return Decision(jnp.where(ok, f // n_m, -1).astype(jnp.int32),
+                    jnp.where(ok, f % n_m, -1).astype(jnp.int32),
+                    jnp.bool_(False))
+
+
+def maxmin_pallas(state, tables, view: SchedView, rr_ptr, params) -> Decision:
+    """`maxmin` with the per-task row minima and the running (task,
+    machine) argmax pair carried in SMEM scratch across grid steps."""
+    t, m, _ = K.fused_maxmin(view.avail, view.in_batch, view.room,
+                             state.tasks.type_id,
+                             _scaled_eet_table(state, tables),
+                             interpret=K.default_interpret())
+    ok = view.in_batch.any() & view.any_room
     return Decision(jnp.where(ok, t, -1).astype(jnp.int32),
                     jnp.where(ok, m, -1).astype(jnp.int32), jnp.bool_(False))
 
@@ -254,6 +324,22 @@ POLICY_NAMES = list(SCHEDULERS)
 POLICY_IDS = {n: i for i, n in enumerate(POLICY_NAMES)}
 BATCH_POLICIES = {"minmin", "maxmin", "edf_mct", "heft"}
 
+# Kernel-backed variants substituted into the lax.switch branch list when
+# ``SimParams(pallas=True)``.  Policies without an entry (``rr`` has no
+# argmin; learned / user-registered policies own their scoring) fall back
+# to their jnp implementation — the flag is a per-policy no-op there.
+PALLAS_SCHEDULERS: dict[str, PolicyFn] = {
+    "fcfs": functools.partial(fcfs, kernel=True),
+    "met": functools.partial(met, kernel=True),
+    "mct": functools.partial(mct, kernel=True),
+    "ee_met": functools.partial(ee_met, kernel=True),
+    "ee_mct": functools.partial(ee_mct, kernel=True),
+    "minmin": minmin_pallas,
+    "maxmin": maxmin_pallas,
+    "edf_mct": functools.partial(edf_mct, kernel=True),
+    "heft": functools.partial(heft, kernel=True),
+}
+
 
 def register_policy(name: str, fn: PolicyFn) -> int:
     """Plug in a user-defined scheduling method (paper feature (ii))."""
@@ -270,19 +356,26 @@ def dispatch(policy_id: jnp.ndarray, state: S.SimState,
              cancel_infeasible: bool | jnp.ndarray,
              const: tuple | None = None,
              up: jnp.ndarray | None = None,
-             params=None) -> Decision:
+             params=None, *, pallas: bool = False) -> Decision:
     """Run the selected policy + the cancellation wrapper.
 
     ``params`` is the learned-policy weight pytree shared by every
     branch (``neural.PolicyParams``); the engine always materializes one
     (default zeros) so the switch operands have a fixed structure.
+
+    ``pallas`` (static, like the engine's ``trace=``) swaps the fused
+    kernel variants (``PALLAS_SCHEDULERS``) into the switch branch list;
+    off compiles the identical pre-kernel HLO.  The kernels' exact
+    jnp-argmin tie-breaking keeps results bitwise identical either way
+    (docs/kernels.md).
     """
     if params is None:
         from repro.core import neural as NN
         params = NN.default_params()
     view = build_view(state, tables, lcap, const, up)
+    table = {**SCHEDULERS, **PALLAS_SCHEDULERS} if pallas else SCHEDULERS
     branches = [
-        (lambda fn: (lambda args: fn(*args)))(SCHEDULERS[n])
+        (lambda fn: (lambda args: fn(*args)))(table[n])
         for n in POLICY_NAMES
     ]
     dec = jax.lax.switch(policy_id, branches,

@@ -81,11 +81,13 @@ class StreamParams(NamedTuple):
     max_events: int | None = None
     trace: bool = False
     trace_capacity: int | None = None
+    pallas: bool = False          # fused dispatch kernels (docs/kernels.md)
 
     def sim_params(self) -> E.SimParams:
         """The dense-engine view (phases read lcap/qcap/cancel from it)."""
         return E.SimParams(lcap=self.lcap, qcap=self.qcap,
-                           cancel_infeasible=self.cancel_infeasible)
+                           cancel_infeasible=self.cancel_infeasible,
+                           pallas=self.pallas)
 
 
 class TaskStream(NamedTuple):
@@ -652,7 +654,8 @@ def simulate_stream(workload, eet: EETTable | np.ndarray,
                     trace: bool = False,
                     trace_capacity: int | None = None,
                     policy_params=None,
-                    max_events: int | None = None) -> StreamResult:
+                    max_events: int | None = None,
+                    pallas: bool = False) -> StreamResult:
     """Host-friendly streaming run: the ``engine.simulate`` mirror.
 
     ``window`` is the live-slot count W (the memory bound); ``chunk``
@@ -681,7 +684,7 @@ def simulate_stream(workload, eet: EETTable | np.ndarray,
                           qcap=qcap or (1 << 30),
                           cancel_infeasible=cancel_infeasible,
                           max_events=max_events, trace=trace,
-                          trace_capacity=trace_capacity)
+                          trace_capacity=trace_capacity, pallas=pallas)
     mtype = jnp.asarray(np.asarray(machine_types, np.int32))
     ws = run_stream(stream, mtype, jnp.asarray(eet_arr, jnp.float32),
                     jnp.asarray(power, jnp.float32),

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.grouped_matmul import grouped_matmul as _gmm
+from repro.kernels.sched_argmin import fused_maxmin as _maxmin
+from repro.kernels.sched_argmin import fused_minmin as _minmin
 from repro.kernels.sched_argmin import masked_argmin as _argmin
 
 
@@ -41,6 +43,26 @@ def masked_argmin(values, mask, *, block_n: int = 256,
     return _argmin(values, mask, block_n=block_n, interpret=it)
 
 
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fused_minmin(avail, in_batch, room, type_id, eet_m, *,
+                 block_n: int = 256, interpret: bool | None = None):
+    """Fused Min-Min pair: (M,) avail + (N,) batch/type + (T, M) EET
+    -> (flat_idx i32, min f32); no valid pair -> (-1, BIG)."""
+    it = _default_interpret() if interpret is None else interpret
+    return _minmin(avail, in_batch, room, type_id, eet_m,
+                   block_n=block_n, interpret=it)
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fused_maxmin(avail, in_batch, room, type_id, eet_m, *,
+                 block_n: int = 256, interpret: bool | None = None):
+    """Fused Max-Min pair -> (task i32, machine i32, score f32); no
+    valid pair -> (-1, -1, -BIG)."""
+    it = _default_interpret() if interpret is None else interpret
+    return _maxmin(avail, in_batch, room, type_id, eet_m,
+                   block_n=block_n, interpret=it)
+
+
 @partial(jax.jit, static_argnames=("block_c", "block_f", "interpret"))
 def grouped_matmul(lhs, rhs, group_sizes, *, block_c: int = 128,
                    block_f: int = 128, interpret: bool | None = None):
@@ -50,4 +72,5 @@ def grouped_matmul(lhs, rhs, group_sizes, *, block_c: int = 128,
                 interpret=it)
 
 
-__all__ = ["flash_attention", "masked_argmin", "grouped_matmul", "ref"]
+__all__ = ["flash_attention", "masked_argmin", "fused_minmin",
+           "fused_maxmin", "grouped_matmul", "ref"]

@@ -27,11 +27,51 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
                       ).astype(q.dtype)
 
 
+BIG = jnp.float32(1e30)
+
+
 def masked_argmin_ref(values, mask):
-    """(N, M) values + bool mask -> (flat_idx, min) with BIG for empty."""
-    masked = jnp.where(mask, values.astype(jnp.float32), jnp.float32(1e30))
-    idx = jnp.argmin(masked)
-    return idx.astype(jnp.int32), masked.reshape(-1)[idx]
+    """(N, M) values + bool mask -> (flat_idx, min).
+
+    Identical to ``jnp.argmin(where(mask, values, BIG))`` when the mask
+    has any True cell; an all-False mask returns the (-1, BIG) sentinel
+    (matching ``schedulers._pick_machine``'s "no feasible machine").
+    """
+    masked = jnp.where(mask, values.astype(jnp.float32), BIG)
+    flat = jnp.argmin(masked).astype(jnp.int32)
+    found = mask.any()
+    idx = jnp.where(found, flat, -1).astype(jnp.int32)
+    vmin = jnp.where(found, masked.reshape(-1)[flat], BIG)
+    return idx, vmin
+
+
+def _completion_ref(avail, in_batch, room, type_id, eet_m):
+    comp = avail.astype(jnp.float32)[None, :] \
+        + eet_m.astype(jnp.float32)[type_id]
+    return comp, in_batch[:, None] & room[None, :]
+
+
+def fused_minmin_ref(avail, in_batch, room, type_id, eet_m):
+    """Min-Min pair via the materialized (N, M) path: gather the
+    speed-scaled EET rows, add availability, mask, flat argmin."""
+    comp, mask = _completion_ref(avail, in_batch, room, type_id, eet_m)
+    return masked_argmin_ref(comp, mask)
+
+
+def fused_maxmin_ref(avail, in_batch, room, type_id, eet_m):
+    """Max-Min (task, machine, score) via the materialized (N, M) path:
+    per-task best completion, argmax over queued tasks (first index,
+    like ``schedulers.maxmin``); no valid pair -> (-1, -1, -BIG)."""
+    comp, mask = _completion_ref(avail, in_batch, room, type_id, eet_m)
+    c = jnp.where(mask, comp, BIG)
+    rowmin = jnp.min(c, axis=1)
+    rowarg = jnp.argmin(c, axis=1)
+    score = jnp.where(in_batch, rowmin, -BIG)
+    t = jnp.argmax(score).astype(jnp.int32)
+    found = mask.any()
+    return (jnp.where(found, t, -1).astype(jnp.int32),
+            jnp.where(found, rowarg[t], -1).astype(jnp.int32),
+            jnp.where(found, score[t], -BIG))
 
 
 def grouped_matmul_ref(lhs, rhs, group_sizes):

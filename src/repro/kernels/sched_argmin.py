@@ -1,11 +1,33 @@
-"""Pallas kernel for the E2C scheduler's inner reduction.
+"""Pallas kernels for the E2C scheduler's inner reductions.
 
 MCT / Min-Min / Max-Min all reduce a masked (tasks x machines) completion-
 time matrix to an argmin pair — the one compute hot-spot of the paper's
 artifact when sweeping thousands of replicas with large task batches.
-The kernel tiles the task dim into VMEM blocks, keeps the machine dim whole
-(M <= a few hundred in any E2C study), and carries the running (min, argmin)
-in SMEM scratch across sequential grid steps.
+
+The family (docs/kernels.md):
+
+  masked_argmin  (N, M) values + mask -> (flat_idx, min).  The generic
+                 reduction every immediate policy pays once per drain step
+                 (M-row argmin) and the building block of the oracles.
+  fused_minmin   mask + DVFS-scaled EET gather + completion compute +
+                 flat argmin in one kernel: the (N, M) completion matrix
+                 is never materialized in HBM.  Backs the `minmin` policy.
+  fused_maxmin   same fusion, but per-task row minima feed a running
+                 argmax: the Max-Min (task, machine) pair in one pass.
+
+Every kernel tiles the task dim into VMEM blocks, keeps the machine dim
+whole (M <= a few hundred in any E2C study), and carries the running
+(best, index) in SMEM scratch across sequential grid steps.
+
+Contract (shared with kernels/ref.py and schedulers._pick_machine):
+  * tie-breaking matches ``jnp.argmin`` / ``jnp.argmax`` exactly — first
+    flat index, row-major — so engine results are bitwise identical when
+    the kernels are switched in (``SimParams(pallas=True)``);
+  * an all-False mask returns the (-1, BIG) sentinel (the schedulers'
+    "no feasible pair" answer) instead of a bogus index 0;
+  * masked cells compare as BIG (1e30): a *valid* cell >= BIG loses to
+    the first masked cell exactly as it does under ``jnp.argmin`` of
+    ``where(mask, v, BIG)``.  NaNs are out of contract.
 """
 from __future__ import annotations
 
@@ -19,40 +41,58 @@ from jax.experimental.pallas import tpu as pltpu
 BIG = 1e30  # python float: jnp constants would be captured tracers in pallas
 
 
-def _argmin_kernel(val_ref, mask_ref, idx_out, min_out, best_scr, *,
+def default_interpret() -> bool:
+    """Pallas kernels interpret everywhere but on a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# masked argmin
+# --------------------------------------------------------------------------
+def _argmin_kernel(val_ref, mask_ref, idx_out, min_out, min_scr, idx_scr, *,
                    bn: int, m: int, n_blocks: int, n_total: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
-        best_scr[0] = jnp.float32(BIG)
-        best_scr[1] = 0.0                       # flat index as f32 payload
+        min_scr[0] = jnp.float32(BIG)
+        idx_scr[0] = jnp.int32(0)
+        idx_scr[1] = jnp.int32(0)           # any-valid flag
 
     vals = val_ref[...].astype(jnp.float32)     # (bn, m)
     mask = mask_ref[...]
     rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, m), 0)
     valid = jnp.logical_and(mask, rows < n_total)
-    vals = jnp.where(valid, vals, BIG)
     # lexicographic argmin == flat argmin with row-major order
-    flat = vals.reshape(-1)
-    j = jnp.argmin(flat)
+    flat = jnp.where(valid, vals, BIG).reshape(-1)
+    j = jnp.argmin(flat)                        # first min within the block
     vmin = flat[j]
-    gidx = i * bn * m + j
+    gidx = (i * bn * m + j).astype(jnp.int32)
 
-    @pl.when(vmin < best_scr[0])
+    # Block 0 always writes its own argmin; later blocks only on a strict
+    # improvement — together that reproduces jnp.argmin's first-flat-index
+    # tie-breaking even when every cell is BIG or +inf.
+    @pl.when((i == 0) | (vmin < min_scr[0]))
     def _update():
-        best_scr[0] = vmin
-        best_scr[1] = gidx.astype(jnp.float32)
+        min_scr[0] = vmin
+        idx_scr[0] = gidx
+
+    idx_scr[1] = idx_scr[1] | valid.any().astype(jnp.int32)
 
     @pl.when(i == n_blocks - 1)
     def _finalize():
-        min_out[0] = best_scr[0]
-        idx_out[0] = best_scr[1].astype(jnp.int32)
+        found = idx_scr[1] > 0
+        idx_out[0] = jnp.where(found, idx_scr[0], -1)
+        min_out[0] = jnp.where(found, min_scr[0], jnp.float32(BIG))
 
 
 def masked_argmin(values: jnp.ndarray, mask: jnp.ndarray, *,
                   block_n: int = 256, interpret: bool = False):
-    """(N, M) masked argmin -> (flat_idx i32, min f32). Empty mask -> BIG."""
+    """(N, M) masked argmin -> (flat_idx i32, min f32).
+
+    Empty mask -> the (-1, BIG) sentinel; otherwise identical (index and
+    value) to ``jnp.argmin(jnp.where(mask, values, BIG))``.
+    """
     N, M = values.shape
     bn = min(block_n, N)
     pad = (-N) % bn
@@ -74,7 +114,188 @@ def masked_argmin(values: jnp.ndarray, mask: jnp.ndarray, *,
         ],
         out_shape=[jax.ShapeDtypeStruct((1,), jnp.int32),
                    jax.ShapeDtypeStruct((1,), jnp.float32)],
-        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32),
+                        pltpu.SMEM((2,), jnp.int32)],
         interpret=interpret,
     )(values, mask)
     return idx[0], vmin[0]
+
+
+# --------------------------------------------------------------------------
+# fused dispatch kernels: mask + EET gather + completion + reduction
+# --------------------------------------------------------------------------
+def _completion_block(avail_ref, inb_ref, room_ref, tid_ref, eet_ref,
+                      i, bn, m, n_total):
+    """One (bn, m) tile of the masked completion matrix, built in-register.
+
+    ``eet_ref`` is the (T, M) *type*-level DVFS-scaled EET table (machine
+    speed already divided in), so the per-task (N, M) gather happens here
+    inside the kernel and the (N, M) matrix never exists in HBM.
+    """
+    tid = tid_ref[...]                                        # (bn,) i32
+    cm = jnp.take(eet_ref[...].astype(jnp.float32), tid, axis=0)  # (bn, m)
+    comp = avail_ref[...].astype(jnp.float32)[None, :] + cm
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, m), 0)
+    valid = (inb_ref[...][:, None] & room_ref[...][None, :]
+             & (rows < n_total))
+    return comp, valid
+
+
+def _minmin_kernel(avail_ref, inb_ref, room_ref, tid_ref, eet_ref,
+                   idx_out, min_out, min_scr, idx_scr, *,
+                   bn: int, m: int, n_blocks: int, n_total: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        min_scr[0] = jnp.float32(BIG)
+        idx_scr[0] = jnp.int32(0)
+        idx_scr[1] = jnp.int32(0)
+
+    comp, valid = _completion_block(avail_ref, inb_ref, room_ref, tid_ref,
+                                    eet_ref, i, bn, m, n_total)
+    flat = jnp.where(valid, comp, BIG).reshape(-1)
+    j = jnp.argmin(flat)
+    vmin = flat[j]
+    gidx = (i * bn * m + j).astype(jnp.int32)
+
+    @pl.when((i == 0) | (vmin < min_scr[0]))
+    def _update():
+        min_scr[0] = vmin
+        idx_scr[0] = gidx
+
+    idx_scr[1] = idx_scr[1] | valid.any().astype(jnp.int32)
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        found = idx_scr[1] > 0
+        idx_out[0] = jnp.where(found, idx_scr[0], -1)
+        min_out[0] = jnp.where(found, min_scr[0], jnp.float32(BIG))
+
+
+def _maxmin_kernel(avail_ref, inb_ref, room_ref, tid_ref, eet_ref,
+                   task_out, mach_out, score_out, max_scr, pair_scr, *,
+                   bn: int, m: int, n_blocks: int, n_total: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        max_scr[0] = jnp.float32(-BIG)
+        pair_scr[0] = jnp.int32(0)
+        pair_scr[1] = jnp.int32(0)
+        pair_scr[2] = jnp.int32(0)          # any-valid-pair flag
+
+    comp, valid = _completion_block(avail_ref, inb_ref, room_ref, tid_ref,
+                                    eet_ref, i, bn, m, n_total)
+    c = jnp.where(valid, comp, BIG)                           # (bn, m)
+    rowmin = jnp.min(c, axis=1)                               # (bn,)
+    rowarg = jnp.argmin(c, axis=1)                            # first index
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, m), 0)
+    inb_row = inb_ref[...] & (rows[:, 0] < n_total)
+    score = jnp.where(inb_row, rowmin, -BIG)                  # (bn,)
+    j = jnp.argmax(score)                                     # first max
+    smax = score[j]
+    gtask = (i * bn + j).astype(jnp.int32)
+    gmach = rowarg[j].astype(jnp.int32)
+
+    @pl.when((i == 0) | (smax > max_scr[0]))
+    def _update():
+        max_scr[0] = smax
+        pair_scr[0] = gtask
+        pair_scr[1] = gmach
+
+    pair_scr[2] = pair_scr[2] | valid.any().astype(jnp.int32)
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        found = pair_scr[2] > 0
+        task_out[0] = jnp.where(found, pair_scr[0], -1)
+        mach_out[0] = jnp.where(found, pair_scr[1], -1)
+        score_out[0] = jnp.where(found, max_scr[0], jnp.float32(-BIG))
+
+
+def _fused_prep(in_batch, type_id, block_n):
+    n = in_batch.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        in_batch = jnp.pad(in_batch, (0, pad))
+        type_id = jnp.pad(type_id, (0, pad))
+    return in_batch, type_id, bn, (n + pad) // bn, n
+
+
+def fused_minmin(avail: jnp.ndarray, in_batch: jnp.ndarray,
+                 room: jnp.ndarray, type_id: jnp.ndarray,
+                 eet_m: jnp.ndarray, *, block_n: int = 256,
+                 interpret: bool = False):
+    """Min-Min inner loop in one kernel -> (flat_idx i32, min f32).
+
+    ``eet_m`` is the (T, M) speed-scaled EET table
+    (``tables.eet[:, mtype] / speed``); the (N, M) gather + completion +
+    mask + argmin all happen per VMEM tile, so nothing O(N·M) is
+    materialized.  No valid (in_batch, room) pair -> (-1, BIG).
+    """
+    M = avail.shape[0]
+    T = eet_m.shape[0]
+    in_batch, type_id, bn, n_blocks, n_total = _fused_prep(
+        in_batch, type_id, block_n)
+    kernel = functools.partial(_minmin_kernel, bn=bn, m=M,
+                               n_blocks=n_blocks, n_total=n_total)
+    idx, vmin = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((M,), lambda i: (0,)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((M,), lambda i: (0,)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((T, M), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32),
+                        pltpu.SMEM((2,), jnp.int32)],
+        interpret=interpret,
+    )(avail, in_batch, room, type_id, eet_m)
+    return idx[0], vmin[0]
+
+
+def fused_maxmin(avail: jnp.ndarray, in_batch: jnp.ndarray,
+                 room: jnp.ndarray, type_id: jnp.ndarray,
+                 eet_m: jnp.ndarray, *, block_n: int = 256,
+                 interpret: bool = False):
+    """Max-Min inner loop in one kernel -> (task i32, machine i32, score).
+
+    Per-task minima of the masked completion matrix feed a running argmax
+    carried in SMEM; the winning task's first-index best machine rides
+    along.  No valid (in_batch, room) pair -> (-1, -1, -BIG).
+    """
+    M = avail.shape[0]
+    T = eet_m.shape[0]
+    in_batch, type_id, bn, n_blocks, n_total = _fused_prep(
+        in_batch, type_id, block_n)
+    kernel = functools.partial(_maxmin_kernel, bn=bn, m=M,
+                               n_blocks=n_blocks, n_total=n_total)
+    task, mach, score = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((M,), lambda i: (0,)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((M,), lambda i: (0,)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((T, M), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32),
+                        pltpu.SMEM((3,), jnp.int32)],
+        interpret=interpret,
+    )(avail, in_batch, room, type_id, eet_m)
+    return task[0], mach[0], score[0]

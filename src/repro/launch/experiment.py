@@ -227,9 +227,10 @@ class ExperimentSpec:
       ``(cell // n_s) % n_f``, dvfs = ``(cell // (n_s n_f)) % n_d``.
 
     ``trace=True`` compiles the in-jit TraceBuffer in (results carry a
-    per-replica trace); ``learned=True`` declares that the run takes a
-    shared ``neural.PolicyParams`` pytree (pass it to
-    :func:`run_experiment`).
+    per-replica trace); ``pallas=True`` routes dispatch through the fused
+    Pallas kernels (bitwise-identical results, docs/kernels.md);
+    ``learned=True`` declares that the run takes a shared
+    ``neural.PolicyParams`` pytree (pass it to :func:`run_experiment`).
     """
     n_replicas: int
     fleet: FleetAxis
@@ -238,6 +239,7 @@ class ExperimentSpec:
     policy: PolicyAxis = field(default_factory=PolicyAxis)
     sim: E.SimParams = field(default_factory=E.SimParams)
     trace: bool = False
+    pallas: bool = False
     learned: bool = False
     seed: int = 0
 
@@ -264,7 +266,7 @@ class ExperimentSpec:
             window=self.workload.streaming, lcap=sp.lcap, qcap=sp.qcap,
             cancel_infeasible=sp.cancel_infeasible,
             max_events=sp.max_events, trace=sp.trace,
-            trace_capacity=sp.trace_capacity)
+            trace_capacity=sp.trace_capacity, pallas=sp.pallas)
 
     @property
     def stream_chunk(self) -> int:
@@ -280,8 +282,17 @@ class ExperimentSpec:
 
     @property
     def sim_params(self) -> E.SimParams:
-        """Effective static engine params (the ``trace`` flag folded in)."""
-        return self.sim._replace(trace=True) if self.trace else self.sim
+        """Effective static engine params (``trace``/``pallas`` folded in).
+
+        Both flags are part of the ``SimParams`` executable-cache key, so
+        pallas-on and pallas-off sweeps each cache their own compiled
+        executable (docs/kernels.md)."""
+        sp = self.sim
+        if self.trace:
+            sp = sp._replace(trace=True)
+        if self.pallas:
+            sp = sp._replace(pallas=True)
+        return sp
 
     def with_(self, **kw) -> "ExperimentSpec":
         """Functional update — ``spec.with_(seed=1, trace=True)``."""

@@ -106,7 +106,7 @@ def test_required_docs_pages_exist():
                  "docs/experiments.md",
                  "docs/visualization.md", "docs/scenarios.md",
                  "docs/adding_a_scheduler.md", "docs/workflows.md",
-                 "docs/learned_scheduling.md"):
+                 "docs/learned_scheduling.md", "docs/kernels.md"):
         assert (REPO / page).exists(), f"missing {page}"
 
 

@@ -19,11 +19,16 @@ from repro.core import state as S
 
 POLICIES = list(P.SCHEDULERS)
 
+# pallas=True runs the same suite through the fused dispatch kernels
+# (interpret mode on CPU) — the oracle parity doubles as the engine-level
+# kernel contract (docs/kernels.md)
+PALLAS_MODES = [False, pytest.param(True, marks=pytest.mark.pallas)]
+
 
 def run_both(eet, power, wl, mtype, policy, lcap=3, qcap=1 << 30,
-             cancel=True):
+             cancel=True, pallas=False):
     st_jax = E.simulate(wl, eet, power, mtype, policy=policy, lcap=lcap,
-                        qcap=qcap, cancel_infeasible=cancel)
+                        qcap=qcap, cancel_infeasible=cancel, pallas=pallas)
     ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
                          power, mtype, policy=policy, lcap=lcap, qcap=qcap,
                          cancel_infeasible=cancel)
@@ -48,10 +53,47 @@ def assert_equivalent(st_jax, ref, context=""):
         atol=1e-2, err_msg=f"energy mismatch {context}")
 
 
-def test_engine_matches_ref_fixed(small_fleet, policy_id):
+@pytest.mark.parametrize("pallas", PALLAS_MODES)
+def test_engine_matches_ref_fixed(small_fleet, policy_id, pallas):
     eet, power, wl, mtype = small_fleet
-    st_jax, ref = run_both(eet, power, wl, mtype, policy_id)
-    assert_equivalent(st_jax, ref, f"policy={policy_id}")
+    st_jax, ref = run_both(eet, power, wl, mtype, policy_id, pallas=pallas)
+    assert_equivalent(st_jax, ref, f"policy={policy_id} pallas={pallas}")
+
+
+@pytest.mark.pallas
+def test_pallas_flag_bitwise_identical(small_fleet, policy_id):
+    """The tentpole contract: every policy's final state is *bitwise*
+    identical with the fused kernels on vs off — not allclose, equal.
+    The kernels reproduce jnp.argmin's first-flat-index tie-breaking, so
+    every drain decision (and hence every downstream float) matches."""
+    import jax
+    eet, power, wl, mtype = small_fleet
+    s_off = E.simulate(wl, eet, power, mtype, policy=policy_id)
+    s_on = E.simulate(wl, eet, power, mtype, policy=policy_id, pallas=True)
+    for a, b in zip(jax.tree_util.tree_leaves(s_off),
+                    jax.tree_util.tree_leaves(s_on)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"pallas on/off divergence policy={policy_id}")
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("policy", ["mct", "minmin", "maxmin", "heft"])
+def test_pallas_flag_identical_trace_stream(small_fleet, policy):
+    """Trace streams (event rows + fleet snapshots) are part of the
+    bitwise contract: the kernels must not reorder or alter a single
+    recorded transition."""
+    import jax
+    eet, power, wl, mtype = small_fleet
+    t_off = E.simulate(wl, eet, power, mtype, policy=policy,
+                       trace=True).trace
+    t_on = E.simulate(wl, eet, power, mtype, policy=policy, trace=True,
+                      pallas=True).trace
+    for a, b in zip(jax.tree_util.tree_leaves(t_off),
+                    jax.tree_util.tree_leaves(t_on)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"trace stream divergence policy={policy}")
 
 
 @settings(max_examples=30, deadline=None)

@@ -88,9 +88,14 @@ def test_masked_argmin_matches_ref(n, m, bn):
 
 
 def test_masked_argmin_empty_mask():
+    """All-masked input returns the documented (-1, BIG) sentinel —
+    matching ``schedulers._pick_machine``'s "no feasible machine" answer
+    — not a bogus index 0 (regression: the index scratch used to stay at
+    its init value on an all-masked input)."""
     vals = jnp.ones((32, 4))
     mask = jnp.zeros((32, 4), bool)
     idx, vmin = ops.masked_argmin(vals, mask, block_n=16, interpret=True)
+    assert int(idx) == -1            # sentinel, not a valid-looking cell
     assert float(vmin) >= 1e29       # BIG sentinel: "nothing schedulable"
 
 
@@ -99,7 +104,8 @@ def test_masked_argmin_empty_mask_with_padded_tail():
     masked-out rows nor the pad rows may leak into the reduction."""
     vals = -jnp.ones((33, 4))        # negative: any leak would win
     mask = jnp.zeros((33, 4), bool)
-    _, vmin = ops.masked_argmin(vals, mask, block_n=16, interpret=True)
+    idx, vmin = ops.masked_argmin(vals, mask, block_n=16, interpret=True)
+    assert int(idx) == -1
     assert float(vmin) >= 1e29
 
 

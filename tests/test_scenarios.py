@@ -40,9 +40,14 @@ def make_instance(seed, n_tasks, n_machines, n_task_types=3,
     return eet, power, wl, mtype
 
 
-def run_both(eet, power, wl, mtype, policy, scen, lcap=3):
+# pallas=True reruns the dynamic-scenario parity through the fused
+# dispatch kernels (docs/kernels.md)
+PALLAS_MODES = [False, pytest.param(True, marks=pytest.mark.pallas)]
+
+
+def run_both(eet, power, wl, mtype, policy, scen, lcap=3, pallas=False):
     st_jax = E.simulate(wl, eet, power, mtype, policy=policy, lcap=lcap,
-                        dynamics=scen.dynamics())
+                        dynamics=scen.dynamics(), pallas=pallas)
     ref = R.simulate_ref(wl.arrival, wl.type_id, wl.deadline, eet.eet,
                          power, mtype, policy=policy, lcap=lcap,
                          speed=scen.speed, power_scale=scen.power_scale,
@@ -75,22 +80,47 @@ def assert_equivalent(st_jax, ref, context=""):
 # ---------------------------------------------------------------------------
 # Engine-vs-ref parity under dynamic scenarios
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pallas", PALLAS_MODES)
 @pytest.mark.parametrize("policy", POLICIES)
-def test_engine_matches_ref_with_failures(policy):
+def test_engine_matches_ref_with_failures(policy, pallas):
     eet, power, wl, mtype = make_instance(17, 24, 4)
     scen = make_scenario(wl, 4, fail_rate=0.15, mttr=3.0, spot=False,
                         dvfs="powersave", n_intervals=3, seed=7)
-    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen)
+    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen,
+                           pallas=pallas)
     assert_equivalent(st_jax, ref, f"policy={policy} fail/repair")
 
 
+@pytest.mark.parametrize("pallas", PALLAS_MODES)
 @pytest.mark.parametrize("policy", ["mct", "minmin", "ee_mct"])
-def test_engine_matches_ref_spot_kill(policy):
+def test_engine_matches_ref_spot_kill(policy, pallas):
     eet, power, wl, mtype = make_instance(23, 20, 3, rate=4.0, slack=5.0)
     scen = make_scenario(wl, 3, fail_rate=0.3, mttr=2.0, spot=True,
                         dvfs="turbo", n_intervals=4, seed=9)
-    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen)
+    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen,
+                           pallas=pallas)
     assert_equivalent(st_jax, ref, f"policy={policy} spot")
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("policy", ["mct", "minmin", "maxmin"])
+def test_pallas_flag_bitwise_identical_dynamic(policy):
+    """Fused kernels on vs off under failures + spot + DVFS: the full
+    final state (preempt counts, partial-energy charges, everything)
+    must be bitwise identical, not merely allclose."""
+    import jax
+    eet, power, wl, mtype = make_instance(31, 22, 4, rate=4.0)
+    scen = make_scenario(wl, 4, fail_rate=0.25, mttr=2.5, spot=True,
+                        dvfs="powersave", n_intervals=3, seed=13)
+    s_off = E.simulate(wl, eet, power, mtype, policy=policy,
+                       dynamics=scen.dynamics())
+    s_on = E.simulate(wl, eet, power, mtype, policy=policy,
+                      dynamics=scen.dynamics(), pallas=True)
+    for a, b in zip(jax.tree_util.tree_leaves(s_off),
+                    jax.tree_util.tree_leaves(s_on)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"pallas on/off divergence policy={policy} dynamic")
 
 
 @settings(max_examples=20, deadline=None)
@@ -244,12 +274,14 @@ def test_onoff_workload_burstier_than_poisson():
     assert cv > 1.3, cv     # Poisson would be ~1.0
 
 
+@pytest.mark.parametrize("pallas", PALLAS_MODES)
 @pytest.mark.parametrize("policy", ["ee_met", "ee_mct", "mct", "minmin"])
-def test_heterogeneous_dvfs_fleet_parity(policy):
+def test_heterogeneous_dvfs_fleet_parity(policy, pallas):
     """Per-machine (non-uniform) speed/power_scale: the energy-aware
     policies rank machines by DVFS-scaled energy, which must agree
     between engine and oracle (regression: the oracle once ranked by
-    unscaled active power)."""
+    unscaled active power).  Under pallas the fused kernels fold the
+    same speed scaling into their in-kernel EET gather."""
     eet, power, wl, mtype = make_instance(29, 20, 3, rate=3.0, slack=5.0)
     scen = Scenario(workload=wl,
                     speed=np.array([1.0, 0.6, 1.2]),
@@ -257,7 +289,8 @@ def test_heterogeneous_dvfs_fleet_parity(policy):
                     down_start=np.full((3, 1), np.inf),
                     down_end=np.full((3, 1), np.inf),
                     kill=np.zeros(3, bool))
-    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen)
+    st_jax, ref = run_both(eet, power, wl, mtype, policy, scen,
+                           pallas=pallas)
     assert_equivalent(st_jax, ref, f"policy={policy} hetero DVFS")
 
 
