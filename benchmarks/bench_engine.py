@@ -15,7 +15,11 @@ the vectorized engine makes *simulated* studies cheap at scale:
   T9. the streaming window engine's per-task drain cost stays flat
       (< 1.5x drift) when total traffic grows 100x at a fixed window —
       memory and per-event cost are O(W), never O(N)
-      (docs/streaming.md).
+      (docs/streaming.md);
+  T10. the in-jit telemetry instruments (core/metrics.py: latency
+      histograms + SLO windows + device-side tail quantiles) cost
+      < 2x the idle baseline — cheaper than tracing because only the
+      queue-depth sample scatters per event (docs/observability.md).
 
 All rows run through the declarative spec pipeline (one cached
 executable per SimParams) — the same path users take.
@@ -76,6 +80,16 @@ def time_traced_sweep(n_replicas: int) -> tuple[float, float]:
     sweep = XP.compile_sweep(E.SimParams(trace=True))
     dt = _time_fn(sweep, inputs + (None, None, None),
                   ready=lambda out: out[1].n_rows)
+    return dt, dt / n_replicas
+
+
+def time_metrics_sweep(n_replicas: int) -> tuple[float, float]:
+    """Replicas with the in-jit telemetry instruments on (T10 — the
+    measured cost of the per-event queue-depth scatter + post-loop fold
+    + device-side quantile columns; EXPERIMENTS.md §Perf)."""
+    inputs = make_replicas(n_replicas, N_TASKS, N_MACHINES, seed=0)
+    sweep = XP.compile_sweep(E.SimParams(metrics=True))
+    dt = _time_fn(sweep, inputs + (None, None, None))
     return dt, dt / n_replicas
 
 
@@ -260,6 +274,15 @@ def run(out_dir=None, smoke: bool = False) -> dict:
                  "per_replica_ms": round(trace_per * 1e3, 3),
                  "replicas_per_s": round(scen_n / trace_total, 1)})
 
+    # telemetry variant: latency histograms + SLO windows + device-side
+    # quantiles inside the jitted loop; default-off compiles identical
+    # HLO (tests/test_metrics.py), opt-in cost is bounded (T10)
+    metrics_total, metrics_per = time_metrics_sweep(scen_n)
+    rows.append({"replicas": f"{scen_n} (metrics)",
+                 "total_s": round(metrics_total, 4),
+                 "per_replica_ms": round(metrics_per * 1e3, 3),
+                 "replicas_per_s": round(scen_n / metrics_total, 1)})
+
     # workflow (DAG) engine: chain vs independent at the same N, plus
     # the inert-parents run that isolates the has_deps machinery (T7)
     chain_per, inert_per, plain_per = time_workflow_sweep(scen_n)
@@ -327,6 +350,8 @@ def run(out_dir=None, smoke: bool = False) -> dict:
             and cache_stats == {"hits": 1, "misses": 1}),
         "T9_streaming_per_task_flat": bool(
             stream_big < 1.5 * stream_small),
+        "T10_metrics_overhead_bounded": bool(
+            metrics_per * 1e3 < 2 * static_same_n),
     }
     payload = {"rows": rows,
                "ref_per_replica_ms": round(ref_per_replica * 1e3, 2),

@@ -13,15 +13,29 @@ artifacts to results/bench/:
 ``--smoke`` runs a CI-sized subset (small replica counts, quick modules
 only) so the whole aggregate finishes in a couple of minutes on a CPU
 runner.  Results are recorded in EXPERIMENTS.md.
+
+``--compare [prev.json]`` turns the ledger into a regression gate
+(docs/observability.md): the fresh record is diffed against ``prev.json``
+(default: the most recent ``run-*.json`` already in results/bench/).  A
+check that flipped PASS -> FAIL, or a benchmark row whose
+``per_replica_ms`` grew beyond ``COMPARE_RATIO`` (2x — CI-runner noise
+is real; tighten locally), is a regression: the machine-readable verdict
+is printed and stored in the record, and the process exits 3.  With no
+baseline available the gate degrades to a non-blocking warning, so the
+first run of a fresh checkout still passes.
 """
 from __future__ import annotations
 
+import glob
 import inspect
 import json
 import os
 import platform
 import sys
 import time
+
+#: timing-regression threshold for --compare (cur > ratio * prev fails)
+COMPARE_RATIO = 2.0
 
 
 def _versions() -> dict:
@@ -34,6 +48,58 @@ def _versions() -> dict:
     return v
 
 
+def _latest_run(results_dir: str, before: str | None = None) -> str | None:
+    """Path of the newest ``run-*.json`` ledger record (optionally
+    excluding ``before``, the record being written)."""
+    runs = sorted(glob.glob(os.path.join(results_dir, "run-*.json")))
+    runs = [r for r in runs if r != before]
+    return runs[-1] if runs else None
+
+
+def compare_runs(prev: dict, cur: dict,
+                 ratio: float = COMPARE_RATIO) -> dict:
+    """Diff two ledger records -> machine-readable regression verdict.
+
+    Two regression classes:
+
+    * a check present in both records that flipped True -> False;
+    * a benchmark row (matched by module + ``replicas`` label) whose
+      ``per_replica_ms`` grew beyond ``ratio`` x the baseline.
+
+    Checks/rows only present on one side are reported as ``added`` /
+    ``removed`` but never fail the gate (new benches must be landable).
+    """
+    checks_prev = prev.get("checks") or {}
+    checks_cur = cur.get("checks") or {}
+    check_regressions = sorted(
+        k for k, v in checks_cur.items()
+        if not v and checks_prev.get(k) is True)
+    timing_regressions = []
+    for mod, payload in (cur.get("payloads") or {}).items():
+        prev_rows = {str(r.get("replicas")): r
+                     for r in (prev.get("payloads", {}).get(mod, {})
+                               .get("rows") or [])}
+        for row in payload.get("rows") or []:
+            base = prev_rows.get(str(row.get("replicas")))
+            if not base:
+                continue
+            b, c = base.get("per_replica_ms"), row.get("per_replica_ms")
+            if b and c and c > ratio * b:
+                timing_regressions.append(
+                    {"module": mod, "row": str(row.get("replicas")),
+                     "prev_ms": b, "cur_ms": c,
+                     "ratio": round(c / b, 2)})
+    return {
+        "baseline": prev.get("timestamp"),
+        "ratio_threshold": ratio,
+        "check_regressions": check_regressions,
+        "timing_regressions": timing_regressions,
+        "checks_added": sorted(set(checks_cur) - set(checks_prev)),
+        "checks_removed": sorted(set(checks_prev) - set(checks_cur)),
+        "ok": not check_regressions and not timing_regressions,
+    }
+
+
 def main(argv=None):
     t0 = time.perf_counter()
     stamp = time.strftime("%Y%m%dT%H%M%S")
@@ -41,6 +107,13 @@ def main(argv=None):
     smoke = "--smoke" in argv
     if smoke:
         argv.remove("--smoke")
+    baseline_path = None
+    compare = "--compare" in argv
+    if compare:
+        i = argv.index("--compare")
+        argv.pop(i)
+        if i < len(argv) and argv[i].endswith(".json"):
+            baseline_path = argv.pop(i)
     from benchmarks import (bench_energy, bench_engine, bench_kernels,
                             bench_policies, eet_from_roofline, roofline)
     from benchmarks.common import RESULTS_DIR
@@ -88,11 +161,28 @@ def main(argv=None):
     }
     os.makedirs(RESULTS_DIR, exist_ok=True)
     run_path = os.path.join(RESULTS_DIR, f"run-{stamp}.json")
+    verdict = None
+    if compare:
+        path = baseline_path or _latest_run(RESULTS_DIR, before=run_path)
+        if path is None:
+            print("compare: no baseline run-*.json found — "
+                  "recording this run as the first baseline (non-blocking)")
+        else:
+            try:
+                with open(path) as f:
+                    verdict = compare_runs(json.load(f), record)
+                verdict["baseline_path"] = path
+                record["compare"] = verdict
+            except Exception as e:  # noqa: BLE001
+                print(f"compare: unreadable baseline {path}: {e!r} "
+                      "(non-blocking)")
     with open(run_path, "w") as f:
         json.dump(record, f, indent=1, default=str)
     print(f"\n{'='*70}\n# summary ({seconds:.1f}s) -> {run_path}")
     for k, v in sorted(all_checks.items()):
         print(f"  {'PASS' if v else 'FAIL'}  {k}")
+    if verdict is not None:
+        print("compare verdict:", json.dumps(verdict, default=str))
     if failures:
         print("harness failures:", failures)
         sys.exit(1)
@@ -100,6 +190,9 @@ def main(argv=None):
     if bad:
         print("failed checks:", bad)
         sys.exit(2)
+    if verdict is not None and not verdict["ok"]:
+        print("regression vs baseline", verdict["baseline"])
+        sys.exit(3)
     print("all benchmark checks passed")
 
 

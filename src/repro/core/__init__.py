@@ -3,7 +3,9 @@
 Public API:
     simulate(workload, eet, power, machine_types, policy, ...)  -> SimState
     run_sim / run_sweep          jit-able engine entry points
-    metrics / ascii_gantt        reports (headless GUI replacement)
+    sim_metrics / ascii_gantt    reports (headless GUI replacement)
+    metrics (module)             in-jit histograms + SLO monitors and the
+                                 shared percentile helpers
     TraceBuffer / viz            in-jit trace capture + SVG/HTML charts
                                  (Gantt, utilization, queues, energy)
     SCHEDULERS / register_policy pluggable scheduling methods
@@ -23,8 +25,15 @@ from repro.core.neural import (LEARNED_POLICIES, LinearParams, MLPParams,
 from repro.core.train_policy import (ESConfig, TrainResult,
                                      miss_energy_score, train)
 from repro.core.report import (SimReport, ascii_gantt, format_report,
-                               heterogeneity, metrics, summarize,
-                               trace_table)
+                               heterogeneity, summarize, trace_table)
+# the report helper keeps its old name inside report; at package level
+# the telemetry *module* core/metrics.py owns the `metrics` attribute
+# (docs/observability.md), so re-export the helper as `sim_metrics`
+from repro.core.report import metrics as sim_metrics
+from repro.core import metrics
+from repro.core.metrics import (DEFAULT_SPEC, MetricsSpec, SimMetrics,
+                                hist_percentiles, hist_quantile,
+                                percentile)
 from repro.core.schedulers import (BATCH_POLICIES, POLICY_IDS, POLICY_NAMES,
                                    SCHEDULERS, register_policy)
 from repro.core.state import MachineDynamics, machine_up, static_dynamics
@@ -44,7 +53,9 @@ __all__ = [
     "EETTable", "default_power", "eet_from_roofline", "homogeneous_eet",
     "load_eet_csv", "save_eet_csv", "synth_eet", "total_energy", "SimParams",
     "make_tables", "run_sim", "run_sweep", "simulate", "SimReport",
-    "ascii_gantt", "format_report", "metrics", "BATCH_POLICIES", "POLICY_IDS",
+    "ascii_gantt", "format_report", "metrics", "sim_metrics",
+    "DEFAULT_SPEC", "MetricsSpec", "SimMetrics", "hist_percentiles",
+    "hist_quantile", "percentile", "BATCH_POLICIES", "POLICY_IDS",
     "POLICY_NAMES", "SCHEDULERS", "register_policy", "Workload",
     "bursty_workload", "load_workload_csv", "poisson_workload",
     "save_workload_csv", "uniform_workload",

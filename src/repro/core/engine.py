@@ -46,6 +46,13 @@ the loop writes one fleet snapshot per event (docs/visualization.md).
 The default (off) leaves ``SimState.trace`` as ``None`` and compiles
 the exact pre-trace HLO — recording is gated on Python-level ``None``
 checks, never ``lax.cond``.
+
+Telemetry: ``SimParams(metrics=True)`` attaches fixed-bucket
+``metrics.SimMetrics`` instruments (latency/slowdown/queue-depth
+histograms + windowed SLO counters, docs/observability.md) — a
+queue-depth sample per event inside the loop, one vectorized per-task
+fold after it.  Off is the same Python-level gate as ``trace``: the
+HLO is byte-identical to the uninstrumented engine.
 """
 from __future__ import annotations
 
@@ -58,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import metrics as ME
 from repro.core import neural as NN
 from repro.core import schedulers as P
 from repro.core import state as S
@@ -79,6 +87,11 @@ class SimParams(NamedTuple):
     pallas: bool = False          # fused dispatch kernels (docs/kernels.md);
     #                               bitwise-identical results, off compiles
     #                               the identical pre-kernel HLO
+    metrics: bool = False         # in-jit histograms + SLO windows
+    #                               (docs/observability.md); off compiles
+    #                               the identical uninstrumented HLO
+    metrics_spec: ME.MetricsSpec | None = None   # bucket/window geometry;
+    #                               None = metrics.DEFAULT_SPEC
 
 
 # --------------------------------------------------------------------------
@@ -466,6 +479,8 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
             n, params.lcap, n_m, k)
         st = replace(st, trace=T.make_buffer(cap, max_events, n_m,
                                              pad=max(n, n_m)))
+    if params.metrics:
+        st = replace(st, metrics=ME.init(params.metrics_spec))
     policy_id = jnp.asarray(policy_id, jnp.int32)
 
     # simulation invariants hoisted out of the event/drain loops: the
@@ -497,9 +512,18 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
         st = _start_tasks(st, tables, up)
         if params.trace:
             st = replace(st, trace=T.snapshot(st.trace, st))
+        if params.metrics:
+            st = replace(st, metrics=ME.observe_event(st.metrics, st.tasks))
         return replace(st, n_events=st.n_events + 1)
 
-    return jax.lax.while_loop(cond, body, st)
+    st = jax.lax.while_loop(cond, body, st)
+    if params.metrics:
+        # per-task telemetry folds once the table is final — provably the
+        # same counts as folding each task at its terminal event (every
+        # task is terminal exactly once), without per-event scatters in
+        # the loop (PR 2's trace-overhead lesson)
+        st = replace(st, metrics=ME.fold_tasks(st.metrics, st.tasks))
+    return st
 
 
 def make_tables(eet: EETTable | np.ndarray, power: np.ndarray,
@@ -528,7 +552,9 @@ def simulate(workload, eet: EETTable, power: np.ndarray,
              trace: bool = False,
              trace_capacity: int | None = None,
              policy_params: NN.PolicyParams | None = None,
-             pallas: bool = False) -> S.SimState:
+             pallas: bool = False,
+             metrics: bool = False,
+             metrics_spec: ME.MetricsSpec | None = None) -> S.SimState:
     """Host-friendly wrapper: one replica, named policy.
 
     ``workload`` is a ``workload.Workload`` (independent tasks) or a
@@ -544,6 +570,10 @@ def simulate(workload, eet: EETTable, power: np.ndarray,
     weights for the ``mlp``/``linear`` policies (docs/learned_scheduling.md).
     ``pallas=True`` routes the scheduler drain through the fused Pallas
     dispatch kernels — bitwise-identical results (docs/kernels.md).
+    ``metrics=True`` attaches ``metrics.SimMetrics`` instruments to the
+    returned state (``.metrics``): latency/slowdown/queue-depth
+    histograms + windowed SLO counters (docs/observability.md), with
+    ``metrics_spec`` overriding the default bucket/window geometry.
     """
     from repro.core.workload import Workflow
     parents = rank = None
@@ -554,7 +584,8 @@ def simulate(workload, eet: EETTable, power: np.ndarray,
         workload = workload.workload
     params = SimParams(lcap=lcap, qcap=qcap or (1 << 30),
                        cancel_infeasible=cancel_infeasible, trace=trace,
-                       trace_capacity=trace_capacity, pallas=pallas)
+                       trace_capacity=trace_capacity, pallas=pallas,
+                       metrics=metrics, metrics_spec=metrics_spec)
     tables = make_tables(eet, power, workload.n_tasks, noise=noise,
                          rank=rank)
     mtype = jnp.asarray(np.asarray(machine_types, np.int32))

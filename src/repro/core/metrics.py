@@ -1,0 +1,410 @@
+"""In-jit telemetry instruments: latency histograms + windowed SLO monitors.
+
+The engine so far reports means and sums; tail behaviour (p95/p99
+response, queue-depth spikes, per-window deadline-miss bursts) is
+invisible.  This module adds fixed-shape, vmap/pjit/scan-safe
+instruments that live *inside* the jitted six-phase loop:
+
+* **Log-spaced-bucket histograms** for response time, wait time,
+  slowdown (response / service) and queue depth at event times.  A
+  histogram is a ``(buckets + 2,)`` int32 counts vector — bucket 0 is
+  the underflow bin ``[0, lo)``, bucket ``B + 1`` the overflow bin
+  ``[hi, inf)`` — so memory is O(buckets) regardless of task count,
+  which is what lets the streaming engine fold per-slot samples into
+  :class:`~repro.core.streaming.StreamAgg` at retirement and drain
+  unbounded traffic with bounded telemetry.
+* **Windowed SLO monitors**: completions, deadline misses and
+  over-target responses counted per fixed wall-clock window of the
+  simulation, so a burst of misses at t≈40s is distinguishable from a
+  uniform 5% miss rate.
+
+Everything is gated exactly like ``trace=`` / ``pallas=``: a static
+``SimParams(metrics=True)`` flag checked at *Python* level during
+tracing, so the off path compiles byte-identical HLO (guarded by
+``tests/test_metrics.py::test_metrics_off_hlo_identical``).
+
+Accumulation strategy (PR 2's lesson — per-event scatters were the
+bulk of trace overhead): only the queue-depth sample, which genuinely
+exists per event, is recorded inside the loop (one width-1 scatter).
+Per-task quantities (response/wait/slowdown/windows) are folded where
+the task's record becomes immutable — in one vectorized pass over the
+final table in the dense engine, and per retiring slot in the
+streaming engine.  Since every task reaches exactly one terminal state
+with final ``t_start``/``t_end``, the fold point cannot change the
+counts; dense-vs-streaming parity tests pin this.
+
+``fold_tasks_np`` is the plain-numpy twin used by the oracle
+``ref_engine`` (inputs cast to float32 first so bucket edges are
+straddled identically), and :func:`hist_quantile` /
+:func:`percentile` are the shared interpolation helpers behind the
+``p50/p95/p99`` report columns and ``serving/engine.py``'s tails.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import state as S
+
+
+class MetricsSpec(NamedTuple):
+    """Static (hashable) instrument configuration.
+
+    Part of :class:`~repro.core.engine.SimParams`' static argument, so
+    every distinct spec compiles its own executable; the counts arrays
+    it shapes are carried as static aux data on :class:`SimMetrics`
+    (same pattern as ``TraceBuffer.cap``) so report code can recover
+    the bucket edges from a result state alone.
+    """
+
+    buckets: int = 32         # log-spaced buckets between lo and hi
+    lo: float = 1e-2          # smallest resolved value (s, or tasks)
+    hi: float = 1e3           # largest resolved value
+    slo_target: float = float("inf")   # response-time SLO target (s)
+    windows: int = 8          # number of wall-clock SLO windows
+    window_s: float = 16.0    # width of each window (s); later events
+    #                           clip into the last window
+
+
+DEFAULT_SPEC = MetricsSpec()
+
+#: histogram fields of :class:`SimMetrics`, in flatten order
+HIST_KEYS = ("response", "wait", "slowdown", "queue_depth")
+#: windowed SLO counter fields, in flatten order
+WINDOW_KEYS = ("win_done", "win_miss", "win_over")
+
+_EPS = np.float32(1e-6)
+
+
+def bucket_edges(spec: MetricsSpec) -> np.ndarray:
+    """(B + 1,) float32 log-spaced bucket edges.
+
+    Computed host-side in float64 then cast once, so the jit engine and
+    the numpy ref mirror bucket against bit-identical edges.
+    """
+    return np.geomspace(spec.lo, spec.hi,
+                        spec.buckets + 1).astype(np.float32)
+
+
+def bucket_bounds(spec: MetricsSpec) -> tuple[np.ndarray, np.ndarray]:
+    """(lows, highs), each (B + 2,): the value range of every counts bin
+    including underflow ([0, lo)) and overflow (collapsed to hi)."""
+    edges = bucket_edges(spec).astype(np.float64)
+    lows = np.concatenate([[0.0], edges])
+    highs = np.concatenate([edges, [edges[-1]]])
+    return lows, highs
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    """Fixed-shape instrument state (a pytree; ``spec`` is static aux)."""
+
+    spec: MetricsSpec         # static: bucket/window geometry
+    response: jnp.ndarray     # i32 (B+2,) response time of completions
+    wait: jnp.ndarray         # i32 (B+2,) wait (t_start - arrival) of
+    #                           tasks that ever started
+    slowdown: jnp.ndarray     # i32 (B+2,) response / service, completions
+    queue_depth: jnp.ndarray  # i32 (B+2,) tasks waiting (batch + machine
+    #                           queues) sampled once per event
+    win_done: jnp.ndarray     # i32 (K,) completions per SLO window
+    win_miss: jnp.ndarray     # i32 (K,) deadline misses per SLO window
+    win_over: jnp.ndarray     # i32 (K,) completions with response >
+    #                           slo_target per SLO window
+
+    _FIELDS = HIST_KEYS + WINDOW_KEYS
+
+
+def _flatten(mt: SimMetrics):
+    return tuple(getattr(mt, k) for k in SimMetrics._FIELDS), mt.spec
+
+
+def _unflatten(spec, leaves):
+    return SimMetrics(spec, *leaves)
+
+
+jax.tree_util.register_pytree_node(SimMetrics, _flatten, _unflatten)
+
+
+def init(spec: MetricsSpec | None = None) -> SimMetrics:
+    """Zeroed instruments for one replica."""
+    spec = spec or DEFAULT_SPEC
+    hist = jnp.zeros((spec.buckets + 2,), jnp.int32)
+    win = jnp.zeros((spec.windows,), jnp.int32)
+    return SimMetrics(spec, hist, hist, hist, hist, win, win, win)
+
+
+# ---------------------------------------------------------------------------
+# In-jit accumulation
+# ---------------------------------------------------------------------------
+
+def _bucket(spec: MetricsSpec, x: jnp.ndarray) -> jnp.ndarray:
+    """Counts-bin index of float32 sample(s) x: 0 underflow, B+1 overflow."""
+    edges = jnp.asarray(bucket_edges(spec))
+    return jnp.searchsorted(edges, x.astype(jnp.float32), side="right"
+                            ).astype(jnp.int32)
+
+
+def _masked_hist(spec: MetricsSpec, counts: jnp.ndarray, x: jnp.ndarray,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    """counts + histogram of x where mask (masked-out lanes dropped)."""
+    b = jnp.where(mask, _bucket(spec, x), spec.buckets + 2)
+    return counts.at[b].add(1, mode="drop")
+
+
+def observe_event(mt: SimMetrics, tasks: S.TaskTable) -> SimMetrics:
+    """One queue-depth sample: tasks waiting (batch + machine queues) at
+    the end of the current event.  The only in-loop instrument — a
+    single width-1 scatter per event."""
+    depth = jnp.sum((tasks.status == S.IN_BATCH)
+                    | (tasks.status == S.IN_MQ)).astype(jnp.float32)
+    qd = mt.queue_depth.at[_bucket(mt.spec, depth)].add(1)
+    return dataclasses.replace(mt, queue_depth=qd)
+
+
+def fold_tasks(mt: SimMetrics, tasks: S.TaskTable,
+               mask: jnp.ndarray | None = None) -> SimMetrics:
+    """Fold per-task telemetry for (a masked subset of) a task table
+    whose selected rows are terminal with final times.
+
+    Called once post-loop by the dense engine (all rows), and per
+    ``_retire`` by the streaming engine (newly-retired slots).  Samples:
+
+    * response = t_end - arrival       (completions)
+    * wait     = t_start - arrival     (tasks that ever started)
+    * slowdown = response / max(t_end - t_start, eps)  (completions)
+    * window counters indexed by floor(t_end / window_s), clipped into
+      the last window; misses are MISSED_QUEUE + MISSED_RUNNING.
+    """
+    spec = mt.spec
+    status = tasks.status
+    sel = jnp.ones(status.shape, bool) if mask is None else mask
+    done = sel & (status == S.COMPLETED)
+    started = sel & S.is_terminal(status) & (tasks.t_start >= 0.0)
+    missed = sel & ((status == S.MISSED_QUEUE)
+                    | (status == S.MISSED_RUNNING))
+
+    resp = tasks.t_end - tasks.arrival
+    wait = tasks.t_start - tasks.arrival
+    slow = resp / jnp.maximum(tasks.t_end - tasks.t_start, _EPS)
+
+    k = jnp.clip((tasks.t_end / jnp.float32(spec.window_s))
+                 .astype(jnp.int32), 0, spec.windows - 1)
+
+    def win(counts, m):
+        return counts.at[jnp.where(m, k, spec.windows)].add(1, mode="drop")
+
+    return dataclasses.replace(
+        mt,
+        response=_masked_hist(spec, mt.response, resp, done),
+        wait=_masked_hist(spec, mt.wait, wait, started),
+        slowdown=_masked_hist(spec, mt.slowdown, slow, done),
+        win_done=win(mt.win_done, done),
+        win_miss=win(mt.win_miss, missed),
+        win_over=win(mt.win_over,
+                     done & (resp > jnp.float32(spec.slo_target))),
+    )
+
+
+def merge(a: SimMetrics, b: SimMetrics) -> SimMetrics:
+    """Elementwise sum of two instrument states (same spec)."""
+    if a.spec != b.spec:
+        raise ValueError(f"cannot merge specs {a.spec} != {b.spec}")
+    return SimMetrics(a.spec, *(getattr(a, k) + getattr(b, k)
+                                for k in SimMetrics._FIELDS))
+
+
+# ---------------------------------------------------------------------------
+# Oracle mirror (plain numpy, used by ref_engine)
+# ---------------------------------------------------------------------------
+
+def bucket_np(spec: MetricsSpec, x) -> np.ndarray:
+    """Numpy twin of :func:`_bucket`.  Casts to float32 *first* so edge
+    straddling matches the float32 engine bit-for-bit."""
+    return np.searchsorted(bucket_edges(spec),
+                           np.asarray(x, np.float32), side="right")
+
+
+def fold_tasks_np(spec: MetricsSpec, status, arrival, t_start, t_end,
+                  queue_depth: np.ndarray | None = None
+                  ) -> dict[str, np.ndarray]:
+    """Numpy twin of :func:`fold_tasks` over a full final task table.
+
+    Returns the counts dict keyed like :func:`to_numpy`; the optional
+    ``queue_depth`` counts (accumulated per event by the ref loop) are
+    passed through so both engines report one schema.
+    """
+    status = np.asarray(status)
+    arrival = np.asarray(arrival, np.float32)
+    t_start = np.asarray(t_start, np.float32)
+    t_end = np.asarray(t_end, np.float32)
+
+    done = status == S.COMPLETED
+    started = (status >= S.COMPLETED) & (t_start >= 0.0)
+    missed = (status == S.MISSED_QUEUE) | (status == S.MISSED_RUNNING)
+
+    resp = t_end - arrival
+    wait = t_start - arrival
+    slow = resp / np.maximum(t_end - t_start, _EPS)
+
+    nbin = spec.buckets + 2
+
+    def hist(x, m):
+        return np.bincount(bucket_np(spec, x[m]),
+                           minlength=nbin).astype(np.int64)
+
+    k = np.clip((t_end / np.float32(spec.window_s)).astype(np.int32),
+                0, spec.windows - 1)
+
+    def win(m):
+        return np.bincount(k[m], minlength=spec.windows).astype(np.int64)
+
+    out = {
+        "response": hist(resp, done),
+        "wait": hist(wait, started),
+        "slowdown": hist(slow, done),
+        "queue_depth": (np.zeros(nbin, np.int64) if queue_depth is None
+                        else np.asarray(queue_depth, np.int64)),
+        "win_done": win(done),
+        "win_miss": win(missed),
+        "win_over": win(done & (resp > np.float32(spec.slo_target))),
+    }
+    return out
+
+
+def to_numpy(mt: SimMetrics) -> dict[str, np.ndarray]:
+    """Counts dict (int64 numpy) in the :func:`fold_tasks_np` schema."""
+    return {k: np.asarray(getattr(mt, k)).astype(np.int64)
+            for k in SimMetrics._FIELDS}
+
+
+# ---------------------------------------------------------------------------
+# Shared percentile / quantile helpers
+# ---------------------------------------------------------------------------
+
+def percentile(samples, q: float) -> float:
+    """Exact sample percentile (linear interpolation), the single
+    implementation behind every host-side tail statistic (sim reports,
+    serving engine).  Returns 0.0 for an empty sample set."""
+    samples = np.asarray(samples, np.float64).ravel()
+    if samples.size == 0:
+        return 0.0
+    return float(np.percentile(samples, q))
+
+
+def hist_quantile(counts, spec_or_edges, q: float) -> float:
+    """q-th percentile reconstructed from histogram counts by linear
+    interpolation within the bucket where the CDF crosses q.
+
+    The underflow bin interpolates over [0, lo); the overflow bin
+    collapses to the top edge (values beyond ``hi`` are unresolved by
+    construction).  Returns 0.0 for an all-zero histogram.
+    """
+    if isinstance(spec_or_edges, MetricsSpec):
+        edges = bucket_edges(spec_or_edges).astype(np.float64)
+    else:
+        edges = np.asarray(spec_or_edges, np.float64)
+    counts = np.asarray(counts, np.float64)
+    total = counts.sum()
+    if total <= 0:
+        return 0.0
+    # a zero target must still land in the first NON-empty bucket
+    # (q=0 == the smallest observed value's bucket, not underflow)
+    target = max(np.clip(q, 0.0, 100.0) / 100.0 * total, 1e-12)
+    cdf = np.cumsum(counts)
+    b = min(int(np.searchsorted(cdf, target, side="left")),
+            counts.size - 1)
+    prev = cdf[b - 1] if b > 0 else 0.0
+    frac = 0.0 if counts[b] <= 0 else float(
+        np.clip((target - prev) / counts[b], 0.0, 1.0))
+    lows = np.concatenate([[0.0], edges])
+    highs = np.concatenate([edges, [edges[-1]]])
+    return float(lows[b] + frac * (highs[b] - lows[b]))
+
+
+def hist_percentiles(counts, spec_or_edges,
+                     qs: Sequence[float] = (50.0, 95.0, 99.0)
+                     ) -> dict[str, float]:
+    """{"p50": ..., "p95": ..., "p99": ...} from histogram counts."""
+    return {f"p{q:g}": hist_quantile(counts, spec_or_edges, q)
+            for q in qs}
+
+
+def quantiles_jnp(counts: jnp.ndarray, spec: MetricsSpec,
+                  qs: Sequence[float] = (50.0, 95.0, 99.0)) -> jnp.ndarray:
+    """Traced twin of :func:`hist_quantile` (vectorized over qs) so
+    sweeps can reduce tails device-side without materializing counts on
+    host.  Agreement with the host version is pinned by tests."""
+    counts = counts.astype(jnp.float32)
+    total = jnp.sum(counts)
+    cdf = jnp.cumsum(counts)
+    targets = jnp.maximum(jnp.asarray(qs, jnp.float32) / 100.0 * total,
+                          1e-12)
+    b = jnp.clip(jnp.searchsorted(cdf, targets, side="left"),
+                 0, counts.shape[0] - 1)
+    prev = jnp.where(b > 0, cdf[jnp.maximum(b - 1, 0)], 0.0)
+    frac = jnp.clip((targets - prev) / jnp.maximum(counts[b], _EPS),
+                    0.0, 1.0)
+    lows_np, highs_np = bucket_bounds(spec)
+    lows = jnp.asarray(lows_np, jnp.float32)
+    highs = jnp.asarray(highs_np, jnp.float32)
+    out = lows[b] + frac * (highs[b] - lows[b])
+    return jnp.where(total > 0, out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Host-side summaries
+# ---------------------------------------------------------------------------
+
+def summary(mt_or_counts: SimMetrics | dict[str, Any],
+            spec: MetricsSpec | None = None) -> dict[str, float]:
+    """Flat report columns from an instrument state (or its counts
+    dict + spec): p50/p95/p99 per histogram plus SLO aggregates."""
+    if isinstance(mt_or_counts, SimMetrics):
+        spec = mt_or_counts.spec
+        counts = to_numpy(mt_or_counts)
+    else:
+        counts = mt_or_counts
+        spec = spec or DEFAULT_SPEC
+    edges = bucket_edges(spec)
+    out: dict[str, float] = {}
+    for key, col in (("response", "resp"), ("wait", "wait"),
+                     ("slowdown", "slow"), ("queue_depth", "qdepth")):
+        for q in (50.0, 95.0, 99.0):
+            out[f"{col}_p{q:g}"] = round(
+                hist_quantile(counts[key], edges, q), 4)
+    done = counts["win_done"].sum()
+    miss = counts["win_miss"].sum()
+    over = counts["win_over"].sum()
+    terminal = done + miss
+    out["slo_miss_rate"] = round(float(miss / max(terminal, 1)), 4)
+    out["slo_over_rate"] = round(float(over / max(done, 1)), 4)
+    return out
+
+
+def window_report(mt_or_counts: SimMetrics | dict[str, Any],
+                  spec: MetricsSpec | None = None) -> list[dict[str, float]]:
+    """Per-SLO-window rows: [t0, t1) bounds, completions, misses,
+    over-target count, and miss rate within the window."""
+    if isinstance(mt_or_counts, SimMetrics):
+        spec = mt_or_counts.spec
+        counts = to_numpy(mt_or_counts)
+    else:
+        counts = mt_or_counts
+        spec = spec or DEFAULT_SPEC
+    rows = []
+    for i in range(spec.windows):
+        done = int(counts["win_done"][i])
+        miss = int(counts["win_miss"][i])
+        rows.append({
+            "t0": i * spec.window_s,
+            "t1": (i + 1) * spec.window_s,
+            "done": done,
+            "miss": miss,
+            "over": int(counts["win_over"][i]),
+            "miss_rate": round(miss / max(done + miss, 1), 4),
+        })
+    return rows

@@ -15,6 +15,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import metrics as ME
 from repro.core import neural as NN
 from repro.core import state as S
 from repro.core import trace as TR
@@ -34,6 +35,9 @@ class RefResult:
     n_preempts: np.ndarray | None = None    # (N,) forced evictions
     trace: list[tuple] | None = None        # (time, kind, task, machine)
     #      rows in the exact order the jitted engine records them
+    metrics: dict | None = None             # metrics.fold_tasks_np counts
+    #      dict (same schema/keys as metrics.to_numpy) when the run was
+    #      instrumented — the oracle for SimParams(metrics=True)
 
 
 @dataclass
@@ -66,6 +70,10 @@ class _Sim:
     # ``window`` tasks are live at once; the rest of the stream loads in
     # id order as slots retire.  None = dense semantics (all loaded).
     window: int | None = None
+    # telemetry mirror (see core/metrics.py / docs/observability.md):
+    # a queue-depth sample per processed event, per-task histograms +
+    # SLO windows folded over the final table.  None = uninstrumented.
+    metrics_spec: ME.MetricsSpec | None = None
 
     status: np.ndarray = field(init=False)
     machine: np.ndarray = field(init=False)
@@ -106,6 +114,8 @@ class _Sim:
         self.busy_until = np.zeros(m, np.float64)
         self.energy = np.zeros(m, np.float64)
         self.active_time = np.zeros(m, np.float64)
+        self.qdepth_counts = None if self.metrics_spec is None else \
+            np.zeros(self.metrics_spec.buckets + 2, np.int64)
         # streaming-window bookkeeping (all-loaded when window is None)
         self.loaded = np.full(n, self.window is None, bool)
         self.retired = np.zeros(n, bool)
@@ -485,13 +495,26 @@ class _Sim:
             self.deadline_drops()
             self.drain()
             self.start_tasks()
+            if self.qdepth_counts is not None:
+                # one sample per processed event, after all phases —
+                # the mirror of engine.py's ME.observe_event
+                depth = int(np.isin(self.status,
+                                    (S.IN_BATCH, S.IN_MQ)).sum())
+                self.qdepth_counts[
+                    ME.bucket_np(self.metrics_spec, depth)] += 1
             budget -= 1
+        metrics = None
+        if self.metrics_spec is not None:
+            metrics = ME.fold_tasks_np(
+                self.metrics_spec, self.status, self.arrival,
+                self.t_start, self.t_end, self.qdepth_counts)
         return RefResult(self.status.copy(), self.machine.copy(),
                          self.t_start.copy(), self.t_end.copy(),
                          self.energy.copy(), self.active_time.copy(),
                          float(max(self.t_end.max(), 0.0)),
                          self.n_preempts.copy(),
-                         None if self.trace is None else list(self.trace))
+                         None if self.trace is None else list(self.trace),
+                         metrics)
 
 
 def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
@@ -501,7 +524,8 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                  down_end=None, kill=None,
                  max_events=None, trace=False,
                  policy_params=None, parents=None,
-                 rank=None, window=None) -> RefResult:
+                 rank=None, window=None, metrics=False,
+                 metrics_spec=None) -> RefResult:
     """Oracle run.  The ``speed``/``power_scale``/``down_*``/``kill``
     kwargs mirror ``state.MachineDynamics`` (all default to the static
     fleet).  ``trace=True`` collects the ``(time, kind, task, machine)``
@@ -514,7 +538,11 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
     mode — pass the *same* float32 ranks the engine gets, so the ``heft``
     orderings agree bit-for-bit).  ``window=W`` enables the streaming
     mirror: at most W tasks are live at once, refilled in id order as
-    slots retire — the oracle for ``streaming.run_stream`` when N > W."""
+    slots retire — the oracle for ``streaming.run_stream`` when N > W.
+    ``metrics=True`` mirrors ``SimParams(metrics=True)``: the returned
+    ``RefResult.metrics`` counts dict (``metrics.fold_tasks_np`` schema,
+    samples cast to float32 before bucketing) must equal the engine's
+    histograms bit-for-bit — ``tests/test_metrics.py`` asserts it."""
     arrival = np.asarray(arrival, np.float64)
     if noise is None:
         noise = np.ones(len(arrival))
@@ -534,5 +562,7 @@ def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,
                policy_params=policy_params,
                parents=None if parents is None
                else np.asarray(parents, np.int32),
-               rank=_f64(rank), window=window)
+               rank=_f64(rank), window=window,
+               metrics_spec=(metrics_spec or ME.DEFAULT_SPEC) if metrics
+               else None)
     return sim.run(max_events)

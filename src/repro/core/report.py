@@ -59,16 +59,26 @@ class SimReport:
         return self.cancelled / max(self.n_tasks, 1)
 
     def row(self) -> dict:
+        # key-for-key with ``summarize_stream``'s shared columns (minus
+        # the stream-only ``retired``/``stalled``) — dashboards consume
+        # either row; tests/test_report.py pins the parity
         return {
+            "n_tasks": self.n_tasks,
             "completed": self.completed, "cancelled": self.cancelled,
             "missed": self.missed_queue + self.missed_running,
+            "missed_queue": self.missed_queue,
+            "missed_running": self.missed_running,
             "preempted": self.preempted,
+            "requeues": self.requeues,
             "completion_rate": round(self.completion_rate, 4),
             "availability": round(self.availability, 4),
             "makespan": round(self.makespan, 4),
             "energy_J": round(self.total_energy, 2),
+            "active_energy_J": round(self.active_energy, 2),
+            "idle_energy_J": round(self.idle_energy, 2),
             "energy_per_task_J": round(self.energy_per_task, 3),
             "mean_response_s": round(self.mean_response, 4),
+            "mean_wait_s": round(self.mean_wait, 4),
             "throughput": round(self.throughput, 4),
         }
 
@@ -169,6 +179,11 @@ def summarize(st: S.SimState, tables: S.StaticTables,
     row.update(heterogeneity(np.asarray(tables.eet),
                              np.asarray(st.machines.mtype),
                              np.asarray(st.machines.speed)))
+    if getattr(st, "metrics", None) is not None:
+        # in-jit telemetry columns (SimParams(metrics=True)): p50/p95/p99
+        # tails via the shared bucket-interpolation helpers + SLO rates
+        from repro.core import metrics as ME
+        row.update(ME.summary(st.metrics))
     return row
 
 
@@ -213,6 +228,11 @@ def summarize_stream(result) -> dict:
     row.update(heterogeneity(np.asarray(result.eet),
                              np.asarray(result.mtype),
                              np.asarray(result.ws.sim.machines.speed)))
+    if result.sim_metrics is not None:
+        # same telemetry columns as the dense ``summarize`` — computed
+        # from the histograms StreamAgg folded per retiring slot
+        from repro.core import metrics as ME
+        row.update(ME.summary(result.sim_metrics))
     return row
 
 

@@ -157,6 +157,9 @@ class SimState:
     #                           `trace`).  Maintained by the engine's
     #                           dependency-release phase; a task may only
     #                           arrive once its counter reaches zero.
+    metrics: Any = None       # metrics.SimMetrics when SimParams.metrics
+    #                           is on, else None (instruments compile
+    #                           out; same Python-level gate as `trace`)
 
 
 @register_pytree

@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core import energy as EN
 from repro.core import engine as E
+from repro.core import metrics as ME
 from repro.core import neural as NN
 from repro.core import schedulers as P
 from repro.core import state as S
@@ -82,9 +83,14 @@ class StreamParams(NamedTuple):
     trace: bool = False
     trace_capacity: int | None = None
     pallas: bool = False          # fused dispatch kernels (docs/kernels.md)
+    metrics: bool = False         # in-jit histograms + SLO windows folded
+    #                               into StreamAgg (docs/observability.md)
+    metrics_spec: ME.MetricsSpec | None = None
 
     def sim_params(self) -> E.SimParams:
-        """The dense-engine view (phases read lcap/qcap/cancel from it)."""
+        """The dense-engine view (phases read lcap/qcap/cancel from it;
+        metrics accumulation is the *window* engine's job — per-slot
+        folds at retirement — so it is not forwarded here)."""
         return E.SimParams(lcap=self.lcap, qcap=self.qcap,
                            cancel_infeasible=self.cancel_infeasible,
                            pallas=self.pallas)
@@ -120,6 +126,11 @@ class StreamAgg(NamedTuple):
     sum_response: jnp.ndarray   # f32  sum of t_end - arrival (completed)
     sum_wait: jnp.ndarray       # f32  sum of t_start - arrival (started)
     makespan: jnp.ndarray       # f32  max terminal time seen (>= 0)
+    metrics: Any = None         # metrics.SimMetrics with
+    #                             StreamParams(metrics=True): histograms +
+    #                             SLO windows folded per retiring slot —
+    #                             O(buckets) memory however large N grows
+    #                             (None compiles out, like SimState.trace)
 
 
 def _init_agg() -> StreamAgg:
@@ -194,6 +205,8 @@ def _retire(ws: WindowState) -> WindowState:
             ok & started, st.tasks.t_start - st.tasks.arrival, 0.0)),
         makespan=jnp.maximum(a.makespan,
                              jnp.max(jnp.where(ok, st.tasks.t_end, 0.0))),
+        metrics=a.metrics if a.metrics is None
+        else ME.fold_tasks(a.metrics, st.tasks, mask=ok),
     )
     return dataclasses.replace(ws, retired=ws.retired | ok, agg=agg)
 
@@ -366,8 +379,14 @@ def _one_event(ws: WindowState, policy_id: jnp.ndarray,
         tb = T.snapshot(tb, replace(
             st, machines=replace(st.machines, running=run_g)))
         st = replace(st, trace=tb)
-    return dataclasses.replace(ws, sim=replace(st,
-                                               n_events=st.n_events + 1))
+    agg = ws.agg
+    if agg.metrics is not None:
+        # the queue-depth sample is count-exact vs the dense engine for
+        # N <= W: unloaded tasks are NOT_ARRIVED there, unused slots are
+        # terminal here — neither is IN_BATCH/IN_MQ
+        agg = agg._replace(metrics=ME.observe_event(agg.metrics, st.tasks))
+    return dataclasses.replace(ws, agg=agg,
+                               sim=replace(st, n_events=st.n_events + 1))
 
 
 # ---------------------------------------------------------------------------
@@ -441,6 +460,9 @@ def run_stream(stream: TaskStream, mtype: jnp.ndarray, eet: jnp.ndarray,
         children_unloaded=jnp.zeros((w,), jnp.int32) if has_deps else None,
         pslot=jnp.full((w, kk), -1, jnp.int32) if has_deps else None,
     )
+    if params.metrics:
+        ws = dataclasses.replace(ws, agg=ws.agg._replace(
+            metrics=ME.init(params.metrics_spec)))
     policy_id = jnp.asarray(policy_id, jnp.int32)
     sparams = params.sim_params()
 
@@ -592,6 +614,12 @@ class StreamResult:
         return self.ws.sim.trace
 
     @property
+    def sim_metrics(self):
+        """``metrics.SimMetrics`` when run with ``metrics=True``, else
+        None — histograms/SLO windows folded over every retired task."""
+        return self.ws.agg.metrics
+
+    @property
     def n_events(self) -> int:
         return int(self.ws.sim.n_events)
 
@@ -655,7 +683,10 @@ def simulate_stream(workload, eet: EETTable | np.ndarray,
                     trace_capacity: int | None = None,
                     policy_params=None,
                     max_events: int | None = None,
-                    pallas: bool = False) -> StreamResult:
+                    pallas: bool = False,
+                    metrics: bool = False,
+                    metrics_spec: ME.MetricsSpec | None = None
+                    ) -> StreamResult:
     """Host-friendly streaming run: the ``engine.simulate`` mirror.
 
     ``window`` is the live-slot count W (the memory bound); ``chunk``
@@ -684,7 +715,8 @@ def simulate_stream(workload, eet: EETTable | np.ndarray,
                           qcap=qcap or (1 << 30),
                           cancel_infeasible=cancel_infeasible,
                           max_events=max_events, trace=trace,
-                          trace_capacity=trace_capacity, pallas=pallas)
+                          trace_capacity=trace_capacity, pallas=pallas,
+                          metrics=metrics, metrics_spec=metrics_spec)
     mtype = jnp.asarray(np.asarray(machine_types, np.int32))
     ws = run_stream(stream, mtype, jnp.asarray(eet_arr, jnp.float32),
                     jnp.asarray(power, jnp.float32),

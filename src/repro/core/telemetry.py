@@ -1,0 +1,170 @@
+"""Host-side pipeline telemetry: span-structured JSONL event logs.
+
+The in-jit layer (``core/metrics.py``) measures the *simulated* system;
+this module measures the *pipeline that runs it* — per-spec normalize /
+lower / compile / execute wall times, executable-cache hit/miss/retrace
+counters, replica counts and device/mesh info for every
+``launch/experiment.py`` run.  ROADMAP item 3 (pod-scale Monte-Carlo)
+is untunable without knowing where the wall-clock goes.
+
+Records are newline-delimited JSON under ``results/telemetry/`` so any
+log pipeline can ingest them.  Two record kinds share the envelope
+``{"ts": <unix seconds>, "run": <run id>, "kind": ...}``:
+
+* ``span``: ``{"name", "dur_s", "depth", "span", "parent"}`` plus
+  arbitrary user attributes — one record per completed ``span()``
+  context, written at exit (children therefore precede parents; the
+  ``span``/``parent`` ids reconstruct the tree).
+* ``event``: ``{"name"}`` plus attributes — point-in-time counters such
+  as cache statistics.
+
+The global log is opt-in and null by default: ``span()`` / ``event()``
+on a disabled module are no-ops costing one attribute lookup, so
+instrumented library code never pays for telemetry nobody asked for.
+Enable programmatically (``telemetry.enable(...)``) or by exporting
+``REPRO_TELEMETRY=1`` (or ``=/some/dir``).  See docs/observability.md.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+import uuid
+from typing import Any, Iterator
+
+DEFAULT_DIR = os.path.join("results", "telemetry")
+_ENV = "REPRO_TELEMETRY"
+
+
+def _jsonable(v: Any) -> Any:
+    """Best-effort plain-JSON coercion (numpy scalars, paths, tuples)."""
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    item = getattr(v, "item", None)
+    if callable(item):
+        try:
+            return item()
+        except Exception:
+            pass
+    return str(v)
+
+
+class TelemetryLog:
+    """One JSONL file of spans/events for one logical run.
+
+    Append-only and flushed per record, so a crashed run keeps every
+    span that completed.  Not thread-safe by design — the experiment
+    pipeline is single-threaded host code.
+    """
+
+    def __init__(self, out_dir: str = DEFAULT_DIR,
+                 run_id: str | None = None):
+        self.run_id = run_id or time.strftime("%Y%m%d-%H%M%S") \
+            + "-" + uuid.uuid4().hex[:6]
+        self.out_dir = out_dir
+        self.path = os.path.join(out_dir, f"telemetry-{self.run_id}.jsonl")
+        self._fh = None
+        self._stack: list[str] = []     # open span ids, for parenting
+        self.n_records = 0
+
+    def _write(self, rec: dict) -> None:
+        if self._fh is None:
+            os.makedirs(self.out_dir, exist_ok=True)
+            self._fh = open(self.path, "a", encoding="utf-8")
+        self._fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        self._fh.flush()
+        self.n_records += 1
+
+    def event(self, name: str, **attrs: Any) -> None:
+        """Point-in-time record (counters, cache stats, config)."""
+        self._write({"ts": round(time.time(), 6), "run": self.run_id,
+                     "kind": "event", "name": name,
+                     **{k: _jsonable(v) for k, v in attrs.items()}})
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs: Any) -> Iterator[dict]:
+        """Timed block; yields a dict for attributes added mid-span.
+        The record lands at exit with ``dur_s`` wall time; exceptions
+        propagate but still produce a record with ``error`` set."""
+        sid = uuid.uuid4().hex[:8]
+        parent = self._stack[-1] if self._stack else None
+        self._stack.append(sid)
+        extra: dict = {}
+        t0 = time.perf_counter()
+        try:
+            yield extra
+        except BaseException as e:
+            extra["error"] = f"{type(e).__name__}: {e}"
+            raise
+        finally:
+            dur = time.perf_counter() - t0
+            self._stack.pop()
+            self._write({
+                "ts": round(time.time(), 6), "run": self.run_id,
+                "kind": "span", "name": name, "dur_s": round(dur, 6),
+                "depth": len(self._stack), "span": sid, "parent": parent,
+                **{k: _jsonable(v) for k, v in {**attrs, **extra}.items()},
+            })
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+# ---------------------------------------------------------------------------
+# Module-level current log (null by default)
+# ---------------------------------------------------------------------------
+_CURRENT: TelemetryLog | None = None
+if os.environ.get(_ENV):
+    _v = os.environ[_ENV]
+    _CURRENT = TelemetryLog(_v if os.sep in _v or _v.startswith(".")
+                            else DEFAULT_DIR)
+
+
+def enable(out_dir: str = DEFAULT_DIR,
+           run_id: str | None = None) -> TelemetryLog:
+    """Install (and return) a fresh module-level log."""
+    global _CURRENT
+    if _CURRENT is not None:
+        _CURRENT.close()
+    _CURRENT = TelemetryLog(out_dir, run_id)
+    return _CURRENT
+
+
+def disable() -> None:
+    global _CURRENT
+    if _CURRENT is not None:
+        _CURRENT.close()
+    _CURRENT = None
+
+
+def current() -> TelemetryLog | None:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def span(name: str, **attrs: Any) -> Iterator[dict]:
+    """``current().span(...)`` or a free no-op when telemetry is off."""
+    if _CURRENT is None:
+        yield {}
+    else:
+        with _CURRENT.span(name, **attrs) as extra:
+            yield extra
+
+
+def event(name: str, **attrs: Any) -> None:
+    """``current().event(...)`` or a free no-op when telemetry is off."""
+    if _CURRENT is not None:
+        _CURRENT.event(name, **attrs)
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Parse one telemetry file back into records (for tests/analysis)."""
+    with open(path, encoding="utf-8") as fh:
+        return [json.loads(line) for line in fh if line.strip()]

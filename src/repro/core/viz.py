@@ -20,6 +20,10 @@ Charts (each returns an SVG string; ``save`` writes it):
 * ``html_report``  all four in one standalone HTML page.
 * ``sweep_utilization``  mean busy-fraction across the replicas of a
                    vmapped traced sweep (faint per-replica curves).
+* ``metrics_dashboard``  the telemetry view (docs/observability.md):
+                   latency/wait/slowdown/queue-depth histograms with
+                   p50/p95/p99 annotations plus the per-window SLO
+                   panel, from a ``simulate(..., metrics=True)`` run.
 
 Outcome colors use a status palette (completed=green, requeued=amber,
 killed=orange-red, missed=red); every chart carries a text legend so
@@ -32,6 +36,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
+from repro.core import metrics as ME
 from repro.core import trace as T
 
 # --- chart chrome (light-surface palette; validated, see
@@ -471,6 +476,127 @@ def sweep_utilization(traces, width: int = 960, height: int = 240,
 
 
 # --------------------------------------------------------------------------
+# Telemetry dashboard (core/metrics.py instruments)
+# --------------------------------------------------------------------------
+def _hist_panel(counts, spec: ME.MetricsSpec, title: str, color: str,
+                xlabel: str, width: int, height: int) -> str:
+    """One histogram panel: bars per counts bin (uniform index spacing ==
+    log-x, since buckets are log-spaced), tail percentiles in the title,
+    exact bucket ranges in tooltips."""
+    counts = np.asarray(counts, float)
+    nbin = counts.size
+    lows, highs = ME.bucket_bounds(spec)
+    p = ME.hist_percentiles(counts, spec)
+    top = max(float(counts.max(initial=0.0)), 1.0)
+    fr = _Frame(width, height, (0.0, float(nbin)), (0.0, top * 1.1),
+                f"{title}  p50={p['p50']:.3g} p95={p['p95']:.3g} "
+                f"p99={p['p99']:.3g}",
+                xlabel=xlabel, ylabel="count", x_axis=False)
+    base = float(fr.sy(0.0))
+    for i in range(nbin):
+        c = counts[i]
+        if c <= 0:
+            continue
+        x0, x1 = float(fr.sx(i)), float(fr.sx(i + 1))
+        y = float(fr.sy(c))
+        kind = ("underflow " if i == 0
+                else "overflow " if i == nbin - 1 else "")
+        fr.parts.append(
+            f'<rect x="{x0 + 0.5:.1f}" y="{y:.1f}" '
+            f'width="{max(x1 - x0 - 1.0, 1.0):.1f}" '
+            f'height="{max(base - y, 0.5):.1f}" fill="{color}">'
+            f'<title>{kind}[{lows[i]:.3g}, {highs[i]:.3g}): '
+            f'{int(c)}</title></rect>')
+    bot = fr.h - fr.pb
+    for i in {1, nbin // 4, nbin // 2, 3 * nbin // 4, nbin - 1}:
+        px = float(fr.sx(i))
+        fr.parts.append(
+            f'<text x="{px:.1f}" y="{bot + 14}" {FONT} font-size="10" '
+            f'fill="{MUTED}" text-anchor="middle">{_fmt(lows[i])}</text>')
+    return fr.render()
+
+
+def _slo_window_panel(counts: dict, spec: ME.MetricsSpec, width: int,
+                      height: int) -> str:
+    """Grouped bars per SLO window: completions / deadline misses /
+    over-target completions, so miss *bursts* are visible."""
+    rows = ME.window_report(counts, spec)
+    series = (("done", SERIES_1), ("miss", "#d03b3b"), ("over", SERIES_2))
+    top = max(max(r[k] for r in rows for k, _ in series), 1)
+    fr = _Frame(width, height, (0.0, 1.0), (0.0, top * 1.1),
+                "SLO windows (completions / misses / over-target)",
+                xlabel="", ylabel="count", pad_b=44, x_axis=False)
+    plot_w = width - fr.pl - fr.pr
+    group_w = plot_w / max(len(rows), 1)
+    bar_w = min(22.0, 0.8 * group_w / len(series))
+    base = float(fr.sy(0.0))
+    for i, r in enumerate(rows):
+        x_mid = fr.pl + (i + 0.5) * group_w
+        x0 = x_mid - bar_w * len(series) / 2
+        for j, (k, color) in enumerate(series):
+            v = float(r[k])
+            h = float(base - fr.sy(v))
+            fr.parts.append(
+                f'<rect x="{x0 + j * bar_w + 1:.1f}" y="{base - h:.1f}" '
+                f'width="{bar_w - 2:.1f}" height="{max(h, 0.5):.1f}" '
+                f'rx="2" fill="{color}">'
+                f'<title>[{r["t0"]:g}, {r["t1"]:g})s {k}: {v:g} '
+                f'(miss rate {r["miss_rate"]:g})</title></rect>')
+        fr.parts.append(
+            f'<text x="{x_mid:.1f}" y="{height - fr.pb + 26}" {FONT} '
+            f'font-size="10" fill="{INK_2}" text-anchor="middle">'
+            f'{r["t0"]:g}s</text>')
+    fr.legend([(k, c) for k, c in series])
+    return fr.render()
+
+
+def metrics_dashboard(mt_or_counts, spec: ME.MetricsSpec | None = None,
+                      width: int = 960,
+                      title: str = "Telemetry dashboard") -> str:
+    """The in-jit instrument view: four histogram panels (response,
+    wait, slowdown, queue depth at event times) and the per-window SLO
+    panel, composed into one SVG.
+
+    Accepts a :class:`~repro.core.metrics.SimMetrics` (a
+    ``simulate(..., metrics=True)`` state's ``.metrics`` /
+    ``simulate_stream``'s ``.sim_metrics``), or a counts dict in the
+    ``fold_tasks_np`` schema plus its ``spec``.
+    """
+    if isinstance(mt_or_counts, ME.SimMetrics):
+        spec = mt_or_counts.spec
+        counts = ME.to_numpy(mt_or_counts)
+    else:
+        counts = mt_or_counts
+        spec = spec or ME.DEFAULT_SPEC
+    panel_w, panel_h, win_h = width // 2, 210, 230
+    panels = [
+        _hist_panel(counts["response"], spec, "Response time", SERIES_1,
+                    "seconds", panel_w, panel_h),
+        _hist_panel(counts["wait"], spec, "Wait time", SERIES_3,
+                    "seconds", panel_w, panel_h),
+        _hist_panel(counts["slowdown"], spec, "Slowdown", SERIES_2,
+                    "response / service", panel_w, panel_h),
+        _hist_panel(counts["queue_depth"], spec, "Queue depth @ events",
+                    MUTED, "tasks waiting", panel_w, panel_h),
+    ]
+    height = 28 + 2 * panel_h + win_h
+    parts = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+        f'height="{height}" viewBox="0 0 {width} {height}" role="img" '
+        f'aria-label="{_esc(title)}">',
+        f'<rect width="{width}" height="{height}" fill="{SURFACE}"/>',
+        f'<text x="16" y="19" {FONT} font-size="14" font-weight="600" '
+        f'fill="{INK}">{_esc(title)}</text>',
+    ]
+    for i, svg in enumerate(panels):
+        x, y = (i % 2) * panel_w, 28 + (i // 2) * panel_h
+        parts.append(f'<g transform="translate({x},{y})">{svg}</g>')
+    parts.append(f'<g transform="translate(0,{28 + 2 * panel_h})">'
+                 f'{_slo_window_panel(counts, spec, width, win_h)}</g>')
+    return "\n".join(parts) + "\n</svg>"
+
+
+# --------------------------------------------------------------------------
 # Policy scoreboard (learned-vs-heuristic comparison)
 # --------------------------------------------------------------------------
 def policy_scoreboard(rows: Sequence[dict],
@@ -525,13 +651,15 @@ def policy_scoreboard(rows: Sequence[dict],
 def html_report(trace_or_state, dynamics=None,
                 title: str = "E2C simulation report",
                 scoreboard: Sequence[dict] | None = None,
-                workflow=None) -> str:
+                workflow=None, metrics=None) -> str:
     """One standalone HTML page with all four charts inline.
 
     ``scoreboard`` (optional): policy-comparison rows (the rows element
     of ``launch.learn.scoreboard(...)``) — appends a
     ``policy_scoreboard`` chart.  ``workflow`` (optional): parent table
-    for dependency arrows on the Gantt (see ``gantt``).
+    for dependency arrows on the Gantt (see ``gantt``).  ``metrics``
+    (optional): a ``SimMetrics`` instrument state (``metrics=True``
+    runs) — appends the ``metrics_dashboard`` telemetry view.
     """
     charts = [
         gantt(trace_or_state, dynamics=dynamics, workflow=workflow),
@@ -539,6 +667,8 @@ def html_report(trace_or_state, dynamics=None,
         queue_depth(trace_or_state),
         energy_over_time(trace_or_state),
     ]
+    if metrics is not None:
+        charts.append(metrics_dashboard(metrics))
     if scoreboard is not None:
         charts.append(policy_scoreboard(scoreboard))
     body = "\n".join(f'<figure style="margin:16px 0">{c}</figure>'

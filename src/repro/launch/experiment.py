@@ -34,6 +34,7 @@ shims delegating here; their replica construction is bitwise-identical
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, NamedTuple
@@ -44,8 +45,10 @@ import numpy as np
 
 from repro.core import energy as EN
 from repro.core import engine as E
+from repro.core import metrics as ME
 from repro.core import schedulers as P
 from repro.core import state as S
+from repro.core import telemetry as TL
 from repro.core.eet import synth_eet
 from repro.core.workload import (WORKFLOW_GENERATORS, make_scenario,
                                  resolve_arrivals, resolve_shapes)
@@ -96,6 +99,21 @@ def summarize_replica(st: S.SimState, tables: S.StaticTables,
                                            st.tasks.t_end - st.tasks.arrival,
                                            0.0)) / jnp.maximum(completed, 1),
     }
+
+
+def _tail_columns(mt: ME.SimMetrics) -> dict:
+    """Device-side tail columns (traced; used under vmap) appended to the
+    replica summary when ``SimParams.metrics`` is on.  Keys match
+    :func:`repro.core.metrics.summary` so experiment tables and report
+    rows stay join-compatible."""
+    out = {}
+    for key, col in (("response", "resp"), ("wait", "wait"),
+                     ("slowdown", "slow"), ("queue_depth", "qdepth")):
+        p50, p95, p99 = ME.quantiles_jnp(getattr(mt, key), mt.spec)
+        out[f"{col}_p50"] = p50
+        out[f"{col}_p95"] = p95
+        out[f"{col}_p99"] = p99
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +258,7 @@ class ExperimentSpec:
     sim: E.SimParams = field(default_factory=E.SimParams)
     trace: bool = False
     pallas: bool = False
+    metrics: bool = False
     learned: bool = False
     seed: int = 0
 
@@ -266,7 +285,8 @@ class ExperimentSpec:
             window=self.workload.streaming, lcap=sp.lcap, qcap=sp.qcap,
             cancel_infeasible=sp.cancel_infeasible,
             max_events=sp.max_events, trace=sp.trace,
-            trace_capacity=sp.trace_capacity, pallas=sp.pallas)
+            trace_capacity=sp.trace_capacity, pallas=sp.pallas,
+            metrics=sp.metrics, metrics_spec=sp.metrics_spec)
 
     @property
     def stream_chunk(self) -> int:
@@ -292,6 +312,8 @@ class ExperimentSpec:
             sp = sp._replace(trace=True)
         if self.pallas:
             sp = sp._replace(pallas=True)
+        if self.metrics:
+            sp = sp._replace(metrics=True)
         return sp
 
     def with_(self, **kw) -> "ExperimentSpec":
@@ -460,7 +482,19 @@ def normalize(spec: ExperimentSpec) -> Replicas:
 # compile: one cached executable per SimParams
 # ---------------------------------------------------------------------------
 _EXEC_CACHE: dict[E.SimParams, Any] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "retraces": 0}
+
+
+def _count_retrace(vf):
+    """Wrap a vmapped sweep so every *trace* of the jitted callable bumps
+    ``_CACHE_STATS["retraces"]`` — the body only runs at trace time, so
+    the counter distinguishes jax's trace-cache hits (free re-runs) from
+    shape/structure-triggered retraces (bench check T8's failure mode,
+    now observable via :func:`cache_stats` and the telemetry log)."""
+    def traced(*args):
+        _CACHE_STATS["retraces"] += 1
+        return vf(*args)
+    return traced
 
 
 def compile_sweep(params: E.SimParams = E.SimParams()):
@@ -490,9 +524,12 @@ def compile_sweep(params: E.SimParams = E.SimParams()):
     def one(tasks, mtype, tables, pid, dyn, par, pp):
         st = E.run_sim(tasks, mtype, tables, pid, params, dyn, pp, par)
         m = summarize_replica(st, tables, dyn)
+        if params.metrics:
+            m.update(_tail_columns(st.metrics))
         return (m, st.trace) if params.trace else m
 
-    fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, None)))
+    fn = jax.jit(_count_retrace(
+        jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, None))))
     _EXEC_CACHE[params] = fn
     return fn
 
@@ -526,9 +563,12 @@ def compile_stream_sweep(params):
                            dyn, pp)
         n = jnp.sum(stream.gid >= 0)
         m = ST.summarize_stream_replica(ws, n, dyn)
+        if params.metrics:
+            m.update(_tail_columns(ws.agg.metrics))
         return (m, ws.sim.trace) if params.trace else m
 
-    fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, None)))
+    fn = jax.jit(_count_retrace(
+        jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, None))))
     _EXEC_CACHE[params] = fn
     return fn
 
@@ -576,13 +616,17 @@ def compile_experiment(spec: ExperimentSpec):
 
 
 def cache_stats() -> dict:
-    """Executable-cache counters: {hits, misses, size}."""
+    """Executable-cache counters: {hits, misses, retraces, size}.
+
+    ``retraces`` counts actual jax traces of cached callables (shape /
+    structure specializations); a dictionary hit that also hits jax's
+    trace cache leaves it unchanged."""
     return dict(_CACHE_STATS, size=len(_EXEC_CACHE))
 
 
 def clear_cache() -> None:
     _EXEC_CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0)
+    _CACHE_STATS.update(hits=0, misses=0, retraces=0)
 
 
 # ---------------------------------------------------------------------------
@@ -612,7 +656,8 @@ class ExperimentResult:
 
 
 def run_experiment(spec: ExperimentSpec, *, mesh=None, policy_params=None,
-                   replicas: Replicas | None = None) -> ExperimentResult:
+                   replicas: Replicas | None = None,
+                   profile_dir: str | None = None) -> ExperimentResult:
     """The one-call pipeline: normalize -> compile (cached) -> execute.
 
     ``mesh`` (a ``jax.sharding.Mesh``) shards the replica axis over
@@ -621,27 +666,57 @@ def run_experiment(spec: ExperimentSpec, *, mesh=None, policy_params=None,
     supplies shared learned-policy weights (``learned=True`` specs).
     ``replicas`` short-circuits normalization when the caller already
     materialized inputs (e.g. to re-run a grid under a different policy
-    column).
+    column).  ``profile_dir`` wraps the execute stage in
+    ``jax.profiler.trace`` (TensorBoard-readable device profile).
+
+    When telemetry is enabled (``repro.core.telemetry``), each stage
+    emits a span — normalize/compile/execute wall times, replica counts,
+    executable-cache counters, device and mesh info — under one parent
+    ``experiment`` span (docs/observability.md).
     """
-    reps = replicas if replicas is not None else normalize(spec)
-    fn = compile_experiment(spec)
-    if mesh is not None:
-        from repro.launch.mesh import mesh_device_count, replica_sharding
-        n_dev = mesh_device_count(mesh)
-        if reps.n_replicas % n_dev:
-            raise ValueError(f"n_replicas {reps.n_replicas} must divide "
-                             f"over {n_dev} devices")
-        reps = jax.device_put(reps, replica_sharding(mesh))
-    if spec.streaming:
-        stream = to_streams(reps, spec.stream_chunk)
+    with TL.span("experiment", streaming=bool(spec.streaming),
+                 policies=spec.policy.policies,
+                 backend=jax.default_backend(),
+                 devices=jax.device_count()) as xsp:
+        with TL.span("normalize") as nsp:
+            reps = replicas if replicas is not None else normalize(spec)
+            nsp["n_replicas"] = reps.n_replicas
+            nsp["reused"] = replicas is not None
+        xsp["n_replicas"] = reps.n_replicas
+        with TL.span("compile") as csp:
+            fn = compile_experiment(spec)
+            csp.update(cache_stats())
         if mesh is not None:
-            from repro.launch.mesh import replica_sharding
-            stream = jax.device_put(stream, replica_sharding(mesh))
-        out = fn(stream, reps.mtype, reps.tables.eet, reps.tables.power,
-                 reps.policy_ids, reps.dynamics, policy_params)
-    else:
-        out = fn(reps.tasks, reps.mtype, reps.tables, reps.policy_ids,
-                 reps.dynamics, reps.parents, policy_params)
+            from repro.launch.mesh import mesh_device_count, replica_sharding
+            n_dev = mesh_device_count(mesh)
+            if reps.n_replicas % n_dev:
+                raise ValueError(f"n_replicas {reps.n_replicas} must divide "
+                                 f"over {n_dev} devices")
+            reps = jax.device_put(reps, replica_sharding(mesh))
+            xsp["mesh"] = dict(getattr(mesh, "shape", {}) or {})
+        with TL.span("execute", profiled=profile_dir is not None) as esp:
+            prof = (jax.profiler.trace(profile_dir) if profile_dir
+                    else contextlib.nullcontext())
+            with prof:
+                if spec.streaming:
+                    stream = to_streams(reps, spec.stream_chunk)
+                    if mesh is not None:
+                        from repro.launch.mesh import replica_sharding
+                        stream = jax.device_put(stream,
+                                                replica_sharding(mesh))
+                    out = fn(stream, reps.mtype, reps.tables.eet,
+                             reps.tables.power, reps.policy_ids,
+                             reps.dynamics, policy_params)
+                else:
+                    out = fn(reps.tasks, reps.mtype, reps.tables,
+                             reps.policy_ids, reps.dynamics, reps.parents,
+                             policy_params)
+                # only force the sync when someone is timing the stage
+                # (keeps the default path's async dispatch untouched)
+                if profile_dir is not None or TL.current() is not None:
+                    out = jax.block_until_ready(out)
+            esp["retraces"] = _CACHE_STATS["retraces"]
+        TL.event("cache", **cache_stats())
     # the executable's output shape follows the EFFECTIVE params (the
     # trace flag may also arrive via sim=SimParams(trace=True))
     metrics, traces = out if spec.sim_params.trace else (out, None)

@@ -32,6 +32,7 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.core import metrics as ME
 from repro.core import ref_engine as R
 from repro.core import state as S
 from repro.core.eet import EETTable
@@ -67,6 +68,7 @@ class ServeReport:
     active_energy: float
     idle_energy: float
     mean_response: float
+    p50_response: float
     p99_response: float
     tokens_generated: int
     wall_seconds: float
@@ -87,6 +89,7 @@ class ServeReport:
                 "makespan_s": round(self.makespan, 3),
                 "energy_J": round(self.total_energy, 1),
                 "mean_resp_s": round(self.mean_response, 4),
+                "p50_resp_s": round(self.p50_response, 4),
                 "p99_resp_s": round(self.p99_response, 4),
                 "tokens": self.tokens_generated}
 
@@ -193,7 +196,8 @@ class ServingEngine:
             active_energy=float(res.active_energy.sum()),
             idle_energy=float(idle),
             mean_response=float(resp.mean()) if resp.size else 0.0,
-            p99_response=float(np.percentile(resp, 99)) if resp.size else 0.0,
+            p50_response=ME.percentile(resp, 50),
+            p99_response=ME.percentile(resp, 99),
             tokens_generated=self.tokens_generated,
             wall_seconds=wall,
             per_machine_util=res.active_time / max(makespan, 1e-9),

@@ -100,6 +100,39 @@ def test_heterogeneity_dvfs_speed_folds_in():
     np.testing.assert_allclose(het["heterogeneity"], 1.0 / 3.0, atol=1e-6)
 
 
+def test_summarize_vs_summarize_stream_key_parity():
+    """The dense and streaming report rows must agree on their shared
+    vocabulary: every dense key is present in the streaming row (same
+    name, same meaning), and the streaming extras are exactly the
+    documented streaming-only columns.  Guards the join-compatibility
+    of mixed dense/streaming sweeps (docs/streaming.md,
+    docs/observability.md) — with the telemetry columns on both sides.
+    """
+    from repro.core import streaming as STR
+    eet = synth_eet(3, 2, seed=4)
+    power = np.array([[10., 80.], [20., 120.]], np.float32)
+    wl = poisson_workload(24, rate=2.0, n_task_types=3,
+                          mean_eet=eet.eet.mean(1), slack=4.0, seed=4)
+    mtype = [0, 1, 0]
+    stt = E.simulate(wl, eet, power, mtype, policy="mct", metrics=True)
+    tables = E.make_tables(eet, power, wl.n_tasks)
+    dense = R.summarize(stt, tables)
+    res = STR.simulate_stream(wl, eet, power, mtype, policy="mct",
+                              window=wl.n_tasks, chunk=8, metrics=True)
+    stream = R.summarize_stream(res)
+    # the heterogeneity context columns need the full fleet tables the
+    # streaming row intentionally doesn't carry; everything else matches
+    het_only = {"heterogeneity", "het_perf_cv", "het_type_entropy"}
+    missing = set(dense) - set(stream) - het_only
+    assert not missing, f"dense keys missing from stream row: {missing}"
+    extras = set(stream) - set(dense)
+    assert extras == {"retired", "stalled"}, extras
+    # shared telemetry columns carry comparable values (same counts at
+    # N <= W, so identical percentile reconstructions)
+    for col in ("resp_p50", "resp_p95", "resp_p99", "slo_miss_rate"):
+        assert dense[col] == stream[col], col
+
+
 def test_summarize_reports_heterogeneity():
     stt, tables, wl = run()           # mtype [0, 1, 0], heterogeneous EET
     row = R.summarize(stt, tables)
