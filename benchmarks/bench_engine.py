@@ -19,7 +19,13 @@ the vectorized engine makes *simulated* studies cheap at scale:
   T10. the in-jit telemetry instruments (core/metrics.py: latency
       histograms + SLO windows + device-side tail quantiles) cost
       < 2x the idle baseline — cheaper than tracing because only the
-      queue-depth sample scatters per event (docs/observability.md).
+      queue-depth sample scatters per event (docs/observability.md);
+  T11. the chunked Monte-Carlo driver (launch/chunked.py) scales flat:
+      per-replica cost at R=100k stays within 1.3x of R=1k (donated
+      buffers + device-side SweepAgg reduction keep host and device
+      memory O(chunk)), and the async double-buffer actually overlaps —
+      host normalize time hidden behind device execution is > 0
+      (docs/scaling.md).
 
 All rows run through the declarative spec pipeline (one cached
 executable per SimParams) — the same path users take.
@@ -216,6 +222,34 @@ def time_streaming_drain(n_small: int, factor: int = 100,
     return per[0], per[1]
 
 
+def time_chunked_sweep(n_small: int, n_big: int, chunk: int = 250):
+    """T11: chunked driver per-replica cost at R=n_small vs R=n_big.
+
+    One small experiment cell (16 tasks, 4 machines, single policy) so
+    the replica axis is the only thing that grows.  Both runs go through
+    ``run_experiment(spec, chunk=...)`` — the donated double-buffered
+    driver folding the device-side SweepAgg — after a warm run that pays
+    the chunk-shaped compilation.  Returns the two per-replica wall
+    times plus the big run's :class:`chunked.ChunkedStats` (whose
+    ``overlap_s`` proves host normalize was hidden behind device
+    execution).
+    """
+    spec = XP.ExperimentSpec(
+        n_small, XP.FleetAxis(4), XP.WorkloadAxis(16),
+        policy=XP.PolicyAxis(("mct",)), seed=0)
+    # compile + warm with the same chunk shape (cache key = SimParams +
+    # chunk geometry, so both timed runs are pure cache hits)
+    XP.run_experiment(spec.with_(n_replicas=2 * chunk), chunk=chunk)
+    per, stats = [], None
+    for n, seed in ((n_small, 0), (n_big, 1)):
+        t0 = time.perf_counter()
+        res = XP.run_experiment(spec.with_(n_replicas=n, seed=seed),
+                                chunk=chunk)
+        per.append((time.perf_counter() - t0) / n)
+        stats = res.chunked
+    return per[0], per[1], stats
+
+
 def run(out_dir=None, smoke: bool = False) -> dict:
     # ref engine indexes tuple fields positionally; rebuild host-side
     inputs = make_replicas(2, N_TASKS, N_MACHINES, seed=0)
@@ -333,6 +367,19 @@ def run(out_dir=None, smoke: bool = False) -> dict:
                      "per_replica_ms": round(per * 1e3, 3),
                      "replicas_per_s": round(1 / per, 1)})
 
+    # chunked Monte-Carlo driver: the replica axis grows 10-100x at a
+    # fixed chunk; per-replica cost must stay flat and the async driver
+    # must actually overlap normalize with device execution (T11)
+    chunk_small, chunk_big = 1000, (10_000 if smoke else 100_000)
+    chunked_small, chunked_big, chunked_stats = time_chunked_sweep(
+        chunk_small, chunk_big)
+    for n, per in ((chunk_small, chunked_small),
+                   (chunk_big, chunked_big)):
+        rows.append({"replicas": f"{n} (chunked, chunk=250)",
+                     "total_s": round(per * n, 4),
+                     "per_replica_ms": round(per * 1e3, 3),
+                     "replicas_per_s": round(1 / per, 1)})
+
     checks = {
         "T1_jit_beats_python_ref": bool(per_replica_1 < ref_per_replica),
         "T2_vmap_amortizes": bool(per_replica_big
@@ -352,8 +399,20 @@ def run(out_dir=None, smoke: bool = False) -> dict:
             stream_big < 1.5 * stream_small),
         "T10_metrics_overhead_bounded": bool(
             metrics_per * 1e3 < 2 * static_same_n),
+        "T11_chunked_per_replica_flat": bool(
+            chunked_big < 1.3 * chunked_small
+            and chunked_stats.overlap_s > 0),
     }
     payload = {"rows": rows,
+               "chunked": {
+                   "chunk": 250,
+                   "n_small": chunk_small,
+                   "n_big": chunk_big,
+                   "per_replica_small_ms": round(chunked_small * 1e3, 3),
+                   "per_replica_big_ms": round(chunked_big * 1e3, 3),
+                   "drift": round(chunked_big / chunked_small, 3),
+                   "overlap_s": round(chunked_stats.overlap_s, 3),
+                   "overlap_frac": round(chunked_stats.overlap_frac, 3)},
                "ref_per_replica_ms": round(ref_per_replica * 1e3, 2),
                "experiment_cache": {
                    "first_s": round(cache_first, 4),
@@ -373,6 +432,7 @@ def run(out_dir=None, smoke: bool = False) -> dict:
           f"(python ref: {ref_per_replica*1e3:.1f} ms/replica)")
     print(md_table(rows))
     print("experiment cache:", payload["experiment_cache"])
+    print("chunked:", payload["chunked"])
     print("checks:", checks)
     return payload
 

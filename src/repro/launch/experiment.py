@@ -56,6 +56,7 @@ from repro.core.workload import (WORKFLOW_GENERATORS, make_scenario,
 __all__ = [
     "FleetAxis", "WorkloadAxis", "ScenarioAxis", "PolicyAxis",
     "ExperimentSpec", "Replicas", "ExperimentResult", "normalize",
+    "normalize_chunk",
     "compile_sweep", "compile_stream_sweep", "compile_experiment",
     "run_experiment", "to_streams",
     "summarize_replica", "cache_stats", "clear_cache",
@@ -384,86 +385,151 @@ def _draw_workload(spec: ExperimentSpec, eet, r: int):
     return gen(wk.n_tasks, wk.rate, wk.n_task_types, eet.eet.mean(1), seed)
 
 
-def _materialize_flat(spec: ExperimentSpec) -> Replicas:
-    """Flat + scenario modes: one shared host RNG, one replica per grid
-    cell.  Draw order per replica (power, [spot], noise, mtype) matches
-    the legacy builders exactly — golden-tested."""
+def _draw_flat_replica(spec: ExperimentSpec, r: int):
+    """One flat/scenario-mode replica, fully determined by ``(spec, r)``.
+
+    The Monte-Carlo draws (power, [spot], noise, mtype — in that order)
+    come from the per-replica substream ``default_rng([seed, r])`` (the
+    ``poisson_workload_chunks`` spawn pattern), so any contiguous range
+    of replicas can be materialized without consuming the draws of the
+    replicas before it — the property :func:`normalize_chunk` needs."""
     wk, fl, sc = spec.workload, spec.fleet, spec.scenario
     policies = spec.policy.policies
     n_p = len(policies)
-    rng = np.random.default_rng(spec.seed)
+    rng = np.random.default_rng([spec.seed, r])
+    eet = synth_eet(wk.n_task_types, fl.n_machine_types,
+                    inconsistency=0.3, seed=spec.seed + r)
+    power = _draw_power(rng, fl.n_machine_types)
+    wl = _draw_workload(spec, eet, r)
+    dyn = None
+    if sc is not None:
+        n_f, n_d = len(sc.fail_rates), len(sc.dvfs_states)
+        scen = make_scenario(
+            wl, fl.n_machines,
+            fail_rate=sc.fail_rates[r % n_f],
+            mttr=sc.mttr,
+            spot=(rng.random() < sc.spot_frac),
+            dvfs=sc.dvfs_states[(r // n_f) % n_d],
+            n_intervals=sc.n_intervals, seed=spec.seed + 31 * r)
+        dyn = scen.dynamics()
+        pol = policies[(r // (n_f * n_d)) % n_p]
+    else:
+        pol = policies[r % n_p]
+    noise = rng.lognormal(0.0, 0.1, wk.n_tasks).astype(np.float32)
+    tt = wl.to_task_table()
+    tab = E.make_tables(eet, power, wk.n_tasks, noise=noise)
+    mt = rng.integers(0, fl.n_machine_types, fl.n_machines)
+    return tt, mt, tab, P.POLICY_IDS[pol], dyn
+
+
+def _materialize_flat(spec: ExperimentSpec, lo: int = 0,
+                      hi: int | None = None) -> Replicas:
+    """Flat + scenario modes: one replica per grid cell, each drawn from
+    its own RNG substream (:func:`_draw_flat_replica`), so replicas
+    ``[lo, hi)`` materialize identically whether drawn alone or as part
+    of the full grid — chunked normalization is bitwise-stable."""
+    hi = spec.n_replicas if hi is None else hi
     tts, mts, tabs, pids, dyns = [], [], [], [], []
-    for r in range(spec.n_replicas):
-        eet = synth_eet(wk.n_task_types, fl.n_machine_types,
-                        inconsistency=0.3, seed=spec.seed + r)
-        power = _draw_power(rng, fl.n_machine_types)
-        wl = _draw_workload(spec, eet, r)
-        if sc is not None:
-            n_f, n_d = len(sc.fail_rates), len(sc.dvfs_states)
-            scen = make_scenario(
-                wl, fl.n_machines,
-                fail_rate=sc.fail_rates[r % n_f],
-                mttr=sc.mttr,
-                spot=(rng.random() < sc.spot_frac),
-                dvfs=sc.dvfs_states[(r // n_f) % n_d],
-                n_intervals=sc.n_intervals, seed=spec.seed + 31 * r)
-            dyns.append(scen.dynamics())
-            pol = policies[(r // (n_f * n_d)) % n_p]
-        else:
-            pol = policies[r % n_p]
-        noise = rng.lognormal(0.0, 0.1, wk.n_tasks).astype(np.float32)
-        tts.append(wl.to_task_table())
-        tabs.append(E.make_tables(eet, power, wk.n_tasks, noise=noise))
-        pids.append(P.POLICY_IDS[pol])
-        mts.append(rng.integers(0, fl.n_machine_types, fl.n_machines))
+    for r in range(lo, hi):
+        tt, mt, tab, pid, dyn = _draw_flat_replica(spec, r)
+        tts.append(tt)
+        mts.append(mt)
+        tabs.append(tab)
+        pids.append(pid)
+        if dyn is not None:
+            dyns.append(dyn)
     return Replicas(
         _stack(tts), jnp.asarray(np.stack(mts), jnp.int32), _stack(tabs),
         jnp.asarray(pids, jnp.int32),
         _stack(dyns) if dyns else None, None)
 
 
-def _materialize_workflow(spec: ExperimentSpec) -> Replicas:
-    """Workflow mode: per-cell RNG, *paired* policy axis — the ``n_p``
-    consecutive replicas of a cell share one DAG / EET / fleet / failure
-    trace.  Parent tables pad to the grid's widest in-degree."""
+def _draw_workflow_cell(spec: ExperimentSpec, cell: int):
+    """One workflow cell (shared by its ``n_p`` paired replicas), fully
+    determined by ``(spec, cell)`` via the per-cell substream
+    ``default_rng(seed + 104729 * cell)`` — already random-access."""
     wk, fl = spec.workload, spec.fleet
     sc = spec.scenario or ScenarioAxis()
-    policies = spec.policy.policies
     shapes = wk.shapes
-    n_p, n_s, n_f = len(policies), len(shapes), len(sc.fail_rates)
+    n_s, n_f = len(shapes), len(sc.fail_rates)
+    crng = np.random.default_rng(spec.seed + 104729 * cell)
+    eet = synth_eet(wk.n_task_types, fl.n_machine_types,
+                    inconsistency=0.3, seed=spec.seed + cell)
+    power = _draw_power(crng, fl.n_machine_types)
+    gen = WORKFLOW_GENERATORS[shapes[cell % n_s]]
+    wf = gen(wk.n_tasks, wk.n_task_types, eet.eet.mean(1),
+             spec.seed + 7919 * cell)
+    scen = make_scenario(
+        wf.workload, fl.n_machines,
+        fail_rate=sc.fail_rates[(cell // n_s) % n_f],
+        mttr=sc.mttr, spot=(crng.random() < sc.spot_frac),
+        dvfs=sc.dvfs_states[(cell // (n_s * n_f))
+                            % len(sc.dvfs_states)],
+        n_intervals=sc.n_intervals, seed=spec.seed + 31 * cell)
+    noise = crng.lognormal(0.0, 0.1, wk.n_tasks).astype(np.float32)
+    tt = wf.workload.to_task_table()
+    mt = crng.integers(0, fl.n_machine_types, fl.n_machines)
+    tab = E.make_tables(eet, power, wk.n_tasks, noise=noise,
+                        rank=wf.ranks(eet.eet.mean(1)))
+    return tt, mt, tab, scen.dynamics(), wf.parents
+
+
+_KMAX_CACHE: dict[ExperimentSpec, int] = {}
+
+
+def _workflow_kmax(spec: ExperimentSpec) -> int:
+    """Grid-wide widest DAG in-degree — the parent-table pad width.
+
+    Chunked normalization needs it up front (a chunk only sees its own
+    cells, but every chunk must pad to the same width as the monolithic
+    grid).  DAG generation is deterministic per cell, so a cheap
+    generate-and-discard pre-pass over the cells recovers exactly the
+    width :func:`_materialize_workflow` computes from the full grid."""
+    km = _KMAX_CACHE.get(spec)
+    if km is None:
+        wk, fl = spec.workload, spec.fleet
+        shapes = wk.shapes
+        n_s = len(shapes)
+        n_p = len(spec.policy.policies)
+        km = 0
+        for cell in range(-(-spec.n_replicas // n_p)):
+            eet = synth_eet(wk.n_task_types, fl.n_machine_types,
+                            inconsistency=0.3, seed=spec.seed + cell)
+            gen = WORKFLOW_GENERATORS[shapes[cell % n_s]]
+            wf = gen(wk.n_tasks, wk.n_task_types, eet.eet.mean(1),
+                     spec.seed + 7919 * cell)
+            km = max(km, wf.parents.shape[1])
+        _KMAX_CACHE[spec] = km
+    return km
+
+
+def _materialize_workflow(spec: ExperimentSpec, lo: int = 0,
+                          hi: int | None = None,
+                          k_max: int | None = None) -> Replicas:
+    """Workflow mode: per-cell RNG, *paired* policy axis — the ``n_p``
+    consecutive replicas of a cell share one DAG / EET / fleet / failure
+    trace.  Parent tables pad to the grid's widest in-degree (``k_max``,
+    computed from the materialized range when not given — chunked
+    callers pass the grid-wide :func:`_workflow_kmax`)."""
+    hi = spec.n_replicas if hi is None else hi
+    policies = spec.policy.policies
+    n_p = len(policies)
     tts, mts, tabs, pids, dyns, pars = [], [], [], [], [], []
-    for cell in range((spec.n_replicas + n_p - 1) // n_p):
-        crng = np.random.default_rng(spec.seed + 104729 * cell)
-        eet = synth_eet(wk.n_task_types, fl.n_machine_types,
-                        inconsistency=0.3, seed=spec.seed + cell)
-        power = _draw_power(crng, fl.n_machine_types)
-        gen = WORKFLOW_GENERATORS[shapes[cell % n_s]]
-        wf = gen(wk.n_tasks, wk.n_task_types, eet.eet.mean(1),
-                 spec.seed + 7919 * cell)
-        scen = make_scenario(
-            wf.workload, fl.n_machines,
-            fail_rate=sc.fail_rates[(cell // n_s) % n_f],
-            mttr=sc.mttr, spot=(crng.random() < sc.spot_frac),
-            dvfs=sc.dvfs_states[(cell // (n_s * n_f))
-                                % len(sc.dvfs_states)],
-            n_intervals=sc.n_intervals, seed=spec.seed + 31 * cell)
-        noise = crng.lognormal(0.0, 0.1, wk.n_tasks).astype(np.float32)
-        tt = wf.workload.to_task_table()
-        mt = crng.integers(0, fl.n_machine_types, fl.n_machines)
-        tab = E.make_tables(eet, power, wk.n_tasks, noise=noise,
-                            rank=wf.ranks(eet.eet.mean(1)))
-        dyn = scen.dynamics()
-        for p in range(min(n_p, spec.n_replicas - cell * n_p)):
-            tts.append(tt)
-            mts.append(mt)
-            tabs.append(tab)
-            pids.append(P.POLICY_IDS[policies[p]])
-            dyns.append(dyn)
-            pars.append(wf.parents)
-    k_max = max(p.shape[1] for p in pars)
-    parents = np.full((spec.n_replicas, wk.n_tasks, k_max), -1, np.int32)
-    for r, p in enumerate(pars):
-        parents[r, :, :p.shape[1]] = p
+    for cell in range(lo // n_p, -(-hi // n_p)):
+        tt, mt, tab, dyn, parents = _draw_workflow_cell(spec, cell)
+        for p in range(n_p):
+            r = cell * n_p + p
+            if lo <= r < hi:
+                tts.append(tt)
+                mts.append(mt)
+                tabs.append(tab)
+                pids.append(P.POLICY_IDS[policies[p]])
+                dyns.append(dyn)
+                pars.append(parents)
+    k_max = max(p.shape[1] for p in pars) if k_max is None else k_max
+    parents = np.full((hi - lo, spec.workload.n_tasks, k_max), -1, np.int32)
+    for i, p in enumerate(pars):
+        parents[i, :, :p.shape[1]] = p
     return Replicas(
         _stack(tts), jnp.asarray(np.stack(mts), jnp.int32), _stack(tabs),
         jnp.asarray(pids, jnp.int32), _stack(dyns), jnp.asarray(parents))
@@ -476,6 +542,21 @@ def normalize(spec: ExperimentSpec) -> Replicas:
     if spec.workflow:
         return _materialize_workflow(spec)
     return _materialize_flat(spec)
+
+
+def normalize_chunk(spec: ExperimentSpec, lo: int, hi: int) -> Replicas:
+    """Materialize replicas ``[lo, hi)`` of the grid — bitwise-identical
+    to slicing :func:`normalize`'s output, without drawing the other
+    replicas (per-replica/per-cell RNG substreams make the grid
+    random-access; launch/chunked.py normalizes one chunk at a time).
+    """
+    if not (0 <= lo < hi <= spec.n_replicas):
+        raise ValueError(f"chunk [{lo}, {hi}) outside grid "
+                         f"[0, {spec.n_replicas})")
+    if spec.workflow:
+        return _materialize_workflow(spec, lo, hi,
+                                     k_max=_workflow_kmax(spec))
+    return _materialize_flat(spec, lo, hi)
 
 
 # ---------------------------------------------------------------------------
@@ -634,16 +715,30 @@ def clear_cache() -> None:
 # ---------------------------------------------------------------------------
 @dataclass
 class ExperimentResult:
-    """Output bundle of :func:`run_experiment`."""
+    """Output bundle of :func:`run_experiment`.
+
+    Chunked runs (``chunk=``) carry the device-reduced
+    ``launch/chunked.py::SweepAgg`` in ``agg`` (plus driver timing in
+    ``chunked``); ``replicas``/``metrics`` are then ``None`` unless
+    ``keep_replicas=True`` stacked host copies of the per-replica
+    metrics back together."""
     spec: ExperimentSpec
-    replicas: Replicas
-    metrics: dict
+    replicas: Replicas | None
+    metrics: dict | None
     traces: Any = None
+    agg: Any = None
+    chunked: Any = None
 
     def by_policy(self, keys: tuple[str, ...] = ("completion_rate",
                                                  "missed", "energy",
                                                  "makespan")) -> list[dict]:
-        """Per-policy mean rows (host-side), in spec policy order."""
+        """Per-policy mean rows (host-side), in spec policy order.
+
+        Chunked results read the rows off the on-device aggregate
+        (exact means); monolithic results average the per-replica
+        columns as before."""
+        if self.agg is not None:
+            return self.agg.by_policy(keys)
         pids = np.asarray(self.replicas.policy_ids)
         rows = []
         for pol in self.spec.policy.policies:
@@ -657,7 +752,10 @@ class ExperimentResult:
 
 def run_experiment(spec: ExperimentSpec, *, mesh=None, policy_params=None,
                    replicas: Replicas | None = None,
-                   profile_dir: str | None = None) -> ExperimentResult:
+                   profile_dir: str | None = None,
+                   chunk: int | None = None,
+                   keep_replicas: bool = False,
+                   on_chunk=None) -> ExperimentResult:
     """The one-call pipeline: normalize -> compile (cached) -> execute.
 
     ``mesh`` (a ``jax.sharding.Mesh``) shards the replica axis over
@@ -669,11 +767,27 @@ def run_experiment(spec: ExperimentSpec, *, mesh=None, policy_params=None,
     column).  ``profile_dir`` wraps the execute stage in
     ``jax.profiler.trace`` (TensorBoard-readable device profile).
 
+    ``chunk=C`` switches to the pod-scale path (``launch/chunked.py``,
+    docs/scaling.md): the grid runs C replicas at a time with donated
+    device buffers and an on-device ``SweepAgg`` reduction, normalize
+    overlapped with device compute — peak memory O(C) instead of O(R),
+    aggregates bitwise-equal to the monolithic path.  ``keep_replicas``
+    additionally stacks host copies of the per-replica metrics;
+    ``on_chunk(c)`` fires as each chunk retires.
+
     When telemetry is enabled (``repro.core.telemetry``), each stage
     emits a span — normalize/compile/execute wall times, replica counts,
     executable-cache counters, device and mesh info — under one parent
     ``experiment`` span (docs/observability.md).
     """
+    if chunk is not None:
+        from repro.launch.chunked import run_chunked_experiment
+        return run_chunked_experiment(
+            spec, chunk, mesh=mesh, policy_params=policy_params,
+            replicas=replicas, keep_replicas=keep_replicas,
+            on_chunk=on_chunk, profile_dir=profile_dir)
+    if keep_replicas or on_chunk is not None:
+        raise ValueError("keep_replicas/on_chunk only apply with chunk=")
     with TL.span("experiment", streaming=bool(spec.streaming),
                  policies=spec.policy.policies,
                  backend=jax.default_backend(),

@@ -70,3 +70,14 @@ def replica_sharding(mesh):
     from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as PS
     return NamedSharding(mesh, PS(tuple(mesh.axis_names)))
+
+
+def put_chunk(tree, mesh, rows: int):
+    """Shard one chunk's replica-leading pytree over ``mesh``
+    (``launch/chunked.py`` calls this per chunk; every chunk — the
+    remainder included — must divide over the mesh devices)."""
+    n_dev = mesh_device_count(mesh)
+    if rows % n_dev:
+        raise ValueError(f"chunk of {rows} replicas must divide over "
+                         f"{n_dev} devices")
+    return jax.device_put(tree, replica_sharding(mesh))

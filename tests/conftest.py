@@ -43,3 +43,24 @@ def small_fleet():
 def policy_id(request):
     """Every registered scheduling policy, one test instance each."""
     return request.param
+
+
+@pytest.fixture(scope="session")
+def shared_sweep():
+    """ONE compiled default-``SimParams`` sweep executable, shared for
+    the whole session across the engine / metrics / streaming / chunked
+    parity suites — each suite re-running the same vmapped sweep reuses
+    this compilation instead of paying its own (tier-1 wall-time
+    satellite, ISSUE 9).  The cache counters are asserted here: the
+    second lookup must be a dictionary hit returning the identical
+    callable."""
+    from repro.core import engine as E
+    from repro.launch import experiment as X
+    fn = X.compile_sweep(E.SimParams())
+    before = X.cache_stats()
+    again = X.compile_sweep(E.SimParams())
+    after = X.cache_stats()
+    assert again is fn, "executable cache lost identity stability"
+    assert after["hits"] == before["hits"] + 1
+    assert after["misses"] == before["misses"]
+    return fn

@@ -107,7 +107,8 @@ def test_required_docs_pages_exist():
                  "docs/visualization.md", "docs/scenarios.md",
                  "docs/adding_a_scheduler.md", "docs/workflows.md",
                  "docs/learned_scheduling.md", "docs/kernels.md",
-                 "docs/streaming.md", "docs/observability.md"):
+                 "docs/streaming.md", "docs/observability.md",
+                 "docs/scaling.md"):
         assert (REPO / page).exists(), f"missing {page}"
 
 

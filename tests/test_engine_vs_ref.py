@@ -151,8 +151,10 @@ def test_noise_changes_actual_not_expected():
     assert_equivalent(st_noisy, ref, "noise=1.5")
 
 
-def test_vmapped_sweep_matches_single_runs():
-    """run_sweep over stacked replicas == per-replica simulate."""
+def test_vmapped_sweep_matches_single_runs(shared_sweep):
+    """run_sweep over stacked replicas == per-replica simulate; the
+    session-shared compiled metrics sweep (conftest ``shared_sweep``)
+    agrees on the same replicas instead of compiling its own."""
     import jax
     import jax.numpy as jnp
     replicas = []
@@ -164,8 +166,12 @@ def test_vmapped_sweep_matches_single_runs():
                          tables, jnp.int32(P.POLICY_IDS["mct"])))
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *replicas)
     out = E.run_sweep(*stacked)
+    metrics = shared_sweep(*stacked, None, None, None)
     for i, (tt, mt, tb, pid) in enumerate(replicas):
         single = E.run_sim(tt, mt, tb, pid)
         np.testing.assert_array_equal(
             np.asarray(out.tasks.status[i]),
             np.asarray(single.tasks.status), err_msg=f"replica {i}")
+        n_done = int(np.sum(np.asarray(single.tasks.status)
+                            == S.COMPLETED))
+        assert int(metrics["completed"][i]) == n_done, f"replica {i}"

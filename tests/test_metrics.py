@@ -385,3 +385,24 @@ def test_viz_metrics_dashboard():
     assert svg.startswith("<svg") and "SLO windows" in svg
     html = V.html_report(stt, metrics=stt.metrics)
     assert "Telemetry dashboard" in html
+
+
+def test_shared_executable_summary_matches_report_rows(shared_sweep):
+    """The session-shared compiled sweep reproduces report.summarize's
+    count columns replica by replica (metrics suite's user of the
+    shared executable — tier-1 wall-time satellite)."""
+    from repro.core import report as REP
+    from repro.launch import experiment as X
+    spec = X.ExperimentSpec(
+        4, X.FleetAxis(4, 2), X.WorkloadAxis(20, 3),
+        policy=X.PolicyAxis(("mct", "minmin")), seed=21)
+    reps = X.normalize(spec)
+    out = shared_sweep(reps.tasks, reps.mtype, reps.tables,
+                       reps.policy_ids, None, None, None)
+    for i in range(spec.n_replicas):
+        tt = jax.tree.map(lambda x: x[i], reps.tasks)
+        tb = jax.tree.map(lambda x: x[i], reps.tables)
+        stt = E.run_sim(tt, reps.mtype[i], tb, reps.policy_ids[i])
+        row = REP.summarize(stt, tb)
+        assert int(out["completed"][i]) == row["completed"], f"rep {i}"
+        assert int(out["missed"][i]) == row["missed"], f"rep {i}"

@@ -338,3 +338,31 @@ def test_property_monotone_events_and_no_live_recycling(seed, policy):
                 f"machine {m} stopped {task}, had {running.get(m)}"
             running[m] = None
     assert int(res.agg.retired) == 60
+
+
+# ---------------------------------------------------------------------------
+# Sweep-level parity through the session-shared compiled executable
+# ---------------------------------------------------------------------------
+def test_stream_sweep_matches_dense_shared_executable(shared_sweep):
+    """Replica-sweep twin of the N <= W parity: the streaming sweep's
+    count metrics equal the dense sweep's, with the dense side running
+    through the session-shared compiled executable (conftest
+    ``shared_sweep``) instead of compiling its own."""
+    from repro.launch import experiment as X
+    n_tasks = 16
+    dense_spec = X.ExperimentSpec(
+        6, X.FleetAxis(4, 2), X.WorkloadAxis(n_tasks, 3),
+        policy=X.PolicyAxis(("mct", "rr")), seed=9)
+    reps = X.normalize(dense_spec)
+    dense = shared_sweep(reps.tasks, reps.mtype, reps.tables,
+                         reps.policy_ids, None, None, None)
+    sres = X.run_experiment(
+        dense_spec.with_(workload=X.WorkloadAxis(n_tasks, 3,
+                                                 streaming=n_tasks)))
+    for k in ("completed", "missed", "cancelled", "preempted"):
+        np.testing.assert_array_equal(
+            np.asarray(dense[k]), np.asarray(sres.metrics[k]),
+            err_msg=f"metric {k}")
+    np.testing.assert_allclose(
+        np.asarray(dense["energy"]), np.asarray(sres.metrics["energy"]),
+        rtol=1e-5, err_msg="energy")
