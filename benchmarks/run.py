@@ -100,6 +100,39 @@ def compare_runs(prev: dict, cur: dict,
     }
 
 
+def _compile_cache_probe() -> dict:
+    """Enable jax's persistent compilation cache and measure it.
+
+    Turns on ``jax_compilation_cache_dir`` (under ``results/jax_cache``,
+    via ``experiment.enable_compilation_cache``), then times one tiny
+    canonical sweep twice: the first call pays trace + compile ("cold" —
+    on a re-run of this process the XLA compile is served from disk, so
+    this number is the cache's measured benefit run-over-run), the
+    second hits jax's in-process caches ("warm").  Both land as attrs on
+    a ``compile_cache`` telemetry span and in the run ledger record.
+    """
+    import jax
+
+    from repro.core import telemetry as TL
+    from repro.launch import experiment as XP
+    from repro.launch.sim import make_replicas
+
+    cache_dir = XP.enable_compilation_cache()
+    info: dict = {"dir": cache_dir or "disabled"}
+    with TL.span("compile_cache", dir=info["dir"]) as sp:
+        probe = make_replicas(2, 16, 4, seed=0) + (None, None, None)
+        sweep = XP.compile_sweep()
+        t0 = time.perf_counter()
+        jax.block_until_ready(sweep(*probe)["completed"])
+        info["cold_compile_s"] = round(time.perf_counter() - t0, 4)
+        t0 = time.perf_counter()
+        jax.block_until_ready(sweep(*probe)["completed"])
+        info["warm_run_s"] = round(time.perf_counter() - t0, 4)
+        sp.update(info)
+    print(f"compile cache: {info}")
+    return info
+
+
 def main(argv=None):
     t0 = time.perf_counter()
     stamp = time.strftime("%Y%m%dT%H%M%S")
@@ -117,6 +150,7 @@ def main(argv=None):
     from benchmarks import (bench_energy, bench_engine, bench_kernels,
                             bench_policies, eet_from_roofline, roofline)
     from benchmarks.common import RESULTS_DIR
+    cache_info = _compile_cache_probe()
     mods = [("bench_policies", bench_policies),
             ("bench_energy", bench_energy),
             ("bench_engine", bench_engine),
@@ -155,6 +189,7 @@ def main(argv=None):
         "modules_run": [n for n, _ in mods],
         "seconds": round(seconds, 2),
         "versions": _versions(),
+        "compile_cache": cache_info,
         "checks": all_checks,
         "failures": [{"module": n, "error": e} for n, e in failures],
         "payloads": payloads,

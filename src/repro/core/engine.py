@@ -72,6 +72,7 @@ from repro.core import state as S
 from repro.core import trace as T
 from repro.core.eet import EETTable
 from repro.core.workload import Workload
+from repro.kernels import sched_argmin as K
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -84,14 +85,29 @@ class SimParams(NamedTuple):
     max_events: int | None = None
     trace: bool = False           # record TraceBuffer (docs/visualization.md)
     trace_capacity: int | None = None   # rows; default row_capacity_bound
-    pallas: bool = False          # fused dispatch kernels (docs/kernels.md);
-    #                               bitwise-identical results, off compiles
-    #                               the identical pre-kernel HLO
+    pallas: bool = False          # fused dispatch + event-reduction kernels
+    #                               (docs/kernels.md); bitwise-identical
+    #                               results, off compiles the identical
+    #                               pre-kernel HLO
     metrics: bool = False         # in-jit histograms + SLO windows
     #                               (docs/observability.md); off compiles
     #                               the identical uninstrumented HLO
     metrics_spec: ME.MetricsSpec | None = None   # bucket/window geometry;
     #                               None = metrics.DEFAULT_SPEC
+    drain_k: int = 1              # speculative drain width: candidate
+    #                               decisions per drain trip, validated to
+    #                               a sequentially-consistent prefix and
+    #                               applied in one masked scatter — bitwise
+    #                               the single-step schedule
+    #                               (docs/engine_perf.md); 1 = sequential.
+    #                               Pays off when dispatch is cheap
+    #                               (grouped single-policy runs); under the
+    #                               batched lax.switch every branch runs
+    #                               K-fold, so the sweep default stays 1
+    legacy_drain: bool = False    # PR-9-equivalent drain loop (recompute
+    #                               machine_available + O(N) queue scan
+    #                               every iteration) — the measured T12
+    #                               baseline, never a production setting
 
 
 # --------------------------------------------------------------------------
@@ -123,7 +139,8 @@ def _completions(st: S.SimState, tb: S.StaticTables) -> S.SimState:
         active_time=mach.active_time + dur,
         running=jnp.where(done_m, -1, mach.running),
     )
-    return replace(st, tasks=tasks, machines=mach)
+    return replace(st, tasks=tasks, machines=mach,
+                   n_live=st.n_live - jnp.sum(done_m, dtype=jnp.int32))
 
 
 def _availability(st: S.SimState, tb: S.StaticTables,
@@ -187,10 +204,17 @@ def _availability(st: S.SimState, tb: S.StaticTables,
     n_pre = n_pre + in_down_q.astype(jnp.int32)
     mq_count = jnp.where(down, 0, st.mq_count)
 
+    # incremental population counters: kills leave the live pool, requeues
+    # (running or machine-queued) rejoin the batch queue
+    kills = jnp.sum(hit & dyn.kill, dtype=jnp.int32) + \
+        jnp.sum(kq, dtype=jnp.int32)
+    requeues = jnp.sum(hit & ~dyn.kill, dtype=jnp.int32) + \
+        jnp.sum(rq, dtype=jnp.int32)
     tasks = replace(tasks, status=status, t_end=t_end, t_start=t_start,
                     machine=machine, seq=seq)
     return replace(st, tasks=tasks, machines=mach, n_preempts=n_pre,
-                   mq_count=mq_count)
+                   mq_count=mq_count, n_live=st.n_live - kills,
+                   n_batch=st.n_batch + requeues)
 
 
 def _release(st: S.SimState, parents: jnp.ndarray) -> S.SimState:
@@ -222,7 +246,9 @@ def _release(st: S.SimState, parents: jnp.ndarray) -> S.SimState:
             s.tasks,
             status=jnp.where(kill, S.CANCELLED, s.tasks.status),
             t_end=jnp.where(kill, s.time, s.tasks.t_end))
-        return replace(s, tasks=tasks, deps_left=left), kill.any()
+        return replace(s, tasks=tasks, deps_left=left,
+                       n_live=s.n_live - jnp.sum(kill, dtype=jnp.int32)
+                       ), kill.any()
 
     st, _ = jax.lax.while_loop(lambda c: c[1], body,
                                (st, jnp.bool_(True)))
@@ -242,7 +268,9 @@ def _arrivals(st: S.SimState, qcap: int) -> S.SimState:
     new = (tasks.status == S.NOT_ARRIVED) & (tasks.arrival <= st.time)
     if st.deps_left is not None:
         new = new & (st.deps_left == 0)
-    in_batch = jnp.sum(tasks.status == S.IN_BATCH)
+    # batch-queue population from the incremental counter — the former
+    # O(N) status scan was paid on every event (docs/engine_perf.md)
+    in_batch = st.n_batch
     pos = jnp.cumsum(new.astype(jnp.int32))           # 1-based admission rank
     admitted = new & (in_batch + pos <= qcap)
     overflow = new & ~admitted
@@ -253,7 +281,9 @@ def _arrivals(st: S.SimState, qcap: int) -> S.SimState:
     status = jnp.where(admitted, S.IN_BATCH, tasks.status)
     status = jnp.where(overflow, S.CANCELLED, status)
     t_end = jnp.where(overflow, tasks.arrival, tasks.t_end)
-    return replace(st, tasks=replace(tasks, status=status, t_end=t_end))
+    return replace(st, tasks=replace(tasks, status=status, t_end=t_end),
+                   n_batch=st.n_batch + jnp.sum(admitted, dtype=jnp.int32),
+                   n_live=st.n_live - jnp.sum(overflow, dtype=jnp.int32))
 
 
 def _deadline_drops(st: S.SimState, tb: S.StaticTables) -> S.SimState:
@@ -267,7 +297,9 @@ def _deadline_drops(st: S.SimState, tb: S.StaticTables) -> S.SimState:
     from_mq = miss_q & (tasks.status == S.IN_MQ)
     mq_count = st.mq_count - jnp.zeros((n_m,), jnp.int32).at[
         jnp.where(from_mq, tasks.machine, n_m)].add(1, mode="drop")
-    st = replace(st, mq_count=mq_count)
+    from_batch = miss_q & (tasks.status == S.IN_BATCH)
+    st = replace(st, mq_count=mq_count,
+                 n_batch=st.n_batch - jnp.sum(from_batch, dtype=jnp.int32))
     if st.trace is not None:
         st = replace(st, trace=T.record(
             st.trace, st.time, T.EV_MISS_QUEUE, jnp.arange(n),
@@ -294,8 +326,10 @@ def _deadline_drops(st: S.SimState, tb: S.StaticTables) -> S.SimState:
         active_time=mach.active_time + dur,
         running=jnp.where(miss_r, -1, mach.running),
     )
+    dropped = jnp.sum(miss_q, dtype=jnp.int32) + \
+        jnp.sum(miss_r, dtype=jnp.int32)
     return replace(st, tasks=replace(tasks, status=status, t_end=t_end),
-                   machines=mach)
+                   machines=mach, n_live=st.n_live - dropped)
 
 
 def _apply_decision(st: S.SimState, dec: P.Decision) -> S.SimState:
@@ -319,7 +353,57 @@ def _apply_decision(st: S.SimState, dec: P.Decision) -> S.SimState:
         1, mode="drop")
     return replace(st, tasks=tasks, seq_counter=st.seq_counter +
                    do_map.astype(jnp.int32), rr_ptr=rr_ptr,
-                   mq_count=mq_count)
+                   mq_count=mq_count,
+                   n_batch=st.n_batch - (dec.task >= 0).astype(jnp.int32),
+                   n_live=st.n_live - do_cancel.astype(jnp.int32))
+
+
+def _apply_decisions_k(st: S.SimState, dec: P.Decision, use: jnp.ndarray
+                       ) -> tuple[S.SimState, jnp.ndarray]:
+    """Apply a validated K-prefix of drain decisions in one masked scatter.
+
+    ``use`` masks the sequentially-consistent prefix (``P.dispatch_k``,
+    which also returns the carried machine-available vector after the
+    prefix); per-candidate semantics are exactly ``_apply_decision``'s,
+    with the mapping-sequence numbers assigned in candidate order
+    (exclusive cumsum) and ``rr_ptr`` advanced past the last applied
+    map.  Returns the state and the applied count for the drain-loop
+    bound.
+    """
+    tasks = st.tasks
+    n = tasks.arrival.shape[0]
+    n_m = st.machines.mtype.shape[0]
+    k = dec.task.shape[0]
+    do_map = use & ~dec.cancel
+    do_cxl = use & dec.cancel
+    tid_map = jnp.where(do_map, dec.task, n)
+    tid_cxl = jnp.where(do_cxl, dec.task, n)
+    seq_rank = jnp.cumsum(do_map.astype(jnp.int32)) - \
+        do_map.astype(jnp.int32)
+    tasks = replace(
+        tasks,
+        status=tasks.status.at[tid_map].set(S.IN_MQ, mode="drop")
+                           .at[tid_cxl].set(S.CANCELLED, mode="drop"),
+        machine=tasks.machine.at[tid_map].set(dec.machine, mode="drop"),
+        seq=tasks.seq.at[tid_map].set(st.seq_counter + seq_rank,
+                                      mode="drop"),
+        t_end=tasks.t_end.at[tid_cxl].set(st.time, mode="drop"),
+    )
+    mid = jnp.where(do_map, dec.machine, n_m)
+    mq_count = st.mq_count.at[mid].add(1, mode="drop")
+    # rr_ptr: one past the last applied mapped machine (unchanged when the
+    # prefix mapped nothing) — sequential per-map advancement telescopes
+    last = jnp.max(jnp.where(do_map, jnp.arange(k), -1))
+    m_last = dec.machine[jnp.clip(last, 0, k - 1)]
+    rr_ptr = jnp.where(last >= 0, (m_last + 1) % n_m, st.rr_ptr)
+    n_applied = jnp.sum(use, dtype=jnp.int32)
+    st = replace(st, tasks=tasks,
+                 seq_counter=st.seq_counter + jnp.sum(do_map,
+                                                      dtype=jnp.int32),
+                 rr_ptr=rr_ptr, mq_count=mq_count,
+                 n_batch=st.n_batch - n_applied,
+                 n_live=st.n_live - jnp.sum(do_cxl, dtype=jnp.int32))
+    return st, n_applied
 
 
 def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
@@ -328,9 +412,18 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
            pparams: NN.PolicyParams | None = None) -> S.SimState:
     """Invoke the scheduler until it returns a no-op.
 
-    Each iteration maps or cancels exactly one batch-queue task, so the
-    loop is bounded by the current batch-queue population (tighter than
-    the task count n — fewer worst-case trips per event).
+    The machine-available vector is computed once per event and carried
+    through the loop — each mapped decision adds its expected time to
+    exactly one machine, which both matches the reference engine's
+    sequential (seq-order) accumulation and drops the former O(N·M)
+    ``queued_work`` reduction from every drain step.
+
+    With ``params.drain_k > 1`` each trip speculates up to K sequential
+    decisions in one batched dispatch and applies the maximal
+    sequentially-consistent prefix (``P.dispatch_k`` — bitwise the
+    single-step schedule), cutting trips from O(queue) to O(queue/K);
+    the loop remains bounded by the batch-queue population, now read
+    from the incremental ``n_batch`` counter.
 
     Tracing note: cancel rows are recorded *after* the loop by diffing
     the status column (one masked write per event, in task-id order)
@@ -339,26 +432,98 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
     reference engine emits its drain cancels in the same task-id order.
     """
     n = st.tasks.arrival.shape[0]
-    bound = jnp.sum(st.tasks.status == S.IN_BATCH).astype(jnp.int32)
+    bound = st.n_batch
     status_before = st.tasks.status
     trace = st.trace
     st = replace(st, trace=None)      # keep the buffers out of the carry
 
+    if const is None:
+        mach = st.machines
+        eet_nm = tb.eet[st.tasks.type_id[:, None], mach.mtype[None, :]] \
+            / mach.speed[None, :]
+        energy_nm = eet_nm * (tb.power[mach.mtype, 1]
+                              * mach.power_scale)[None, :]
+        const = (eet_nm, energy_nm)
+    eet_nm = const[0]
+
+    if params.legacy_drain:
+        # PR-9-equivalent loop (the T12 bench baseline, never a
+        # production setting): every iteration re-runs the O(N·M)
+        # ``machine_available`` reduction inside ``build_view`` and the
+        # bound is the O(N) status scan — docs/engine_perf.md
+        bound_l = jnp.sum(st.tasks.status == S.IN_BATCH, dtype=jnp.int32)
+
+        def cond_l(c):
+            _, cont, iters = c
+            return cont & (iters < bound_l)
+
+        def body_l(c):
+            s, _, iters = c
+            dec = P.dispatch(policy_id, s, tb, params.lcap,
+                             params.cancel_infeasible, const, up, pparams,
+                             pallas=params.pallas)
+            return _apply_decision(s, dec), dec.task >= 0, iters + 1
+
+        st, _, _ = jax.lax.while_loop(
+            cond_l, body_l, (st, jnp.bool_(True), jnp.int32(0)))
+        return _drain_trace(st, trace, status_before)
+
+    # one availability reduction per event, reusing the hoisted eet_nm
+    # (the same floats machine_available gathers, summed in the same
+    # task-id order)
+    mach = st.machines
+    base = jnp.maximum(st.time, jnp.where(mach.running >= 0,
+                                          mach.busy_until, st.time))
+    in_mq = (st.tasks.status == S.IN_MQ)[:, None] & (
+        st.tasks.machine[:, None] == jnp.arange(mach.mtype.shape[0])[None])
+    avail0 = base + jnp.sum(jnp.where(in_mq, eet_nm, 0.0), axis=0)
+    k = max(1, int(params.drain_k))
+
     def cond(c):
-        _, cont, iters = c
+        _, _, cont, iters = c
         return cont & (iters < bound)
 
-    def body(c):
-        s, _, iters = c
+    def single_step(s, avail, iters):
         dec = P.dispatch(policy_id, s, tb, params.lcap,
                          params.cancel_infeasible, const, up, pparams,
-                         pallas=params.pallas)
+                         pallas=params.pallas, avail=avail)
         s = _apply_decision(s, dec)
-        return s, dec.task >= 0, iters + 1
+        do_map = (dec.task >= 0) & ~dec.cancel
+        m_oh = (jnp.arange(avail.shape[0]) == dec.machine) & do_map
+        avail = jnp.where(
+            m_oh, avail + eet_nm[jnp.clip(dec.task, 0, n - 1)], avail)
+        return s, avail, dec.task >= 0, iters + 1
 
-    st, _, _ = jax.lax.while_loop(cond, body, (st, jnp.bool_(True),
-                                               jnp.int32(0)))
+    if k == 1:
+        def body(c):
+            s, avail, _, iters = c
+            return single_step(s, avail, iters)
+    else:
+        # K-wide trip: one batched dispatch constructs/validates up to K
+        # sequential decisions and applies the maximal prefix in one
+        # masked scatter.  (No shallow-queue fallback branch: under vmap
+        # a ``lax.cond`` batches into a select that executes BOTH
+        # branches every trip, so a hybrid costs the sum of the paths —
+        # measured in docs/engine_perf.md.)
+        def body(c):
+            s, avail, _, iters = c
+            dec, use, av = P.dispatch_k(policy_id, s, tb, params.lcap,
+                                        params.cancel_infeasible, k,
+                                        const, up, pparams,
+                                        pallas=params.pallas, avail=avail)
+            s, n_applied = _apply_decisions_k(s, dec, use)
+            return s, av, dec.task[0] >= 0, iters + n_applied
+
+    st, _, _, _ = jax.lax.while_loop(cond, body, (st, avail0,
+                                                  jnp.bool_(True),
+                                                  jnp.int32(0)))
+    return _drain_trace(st, trace, status_before)
+
+
+def _drain_trace(st: S.SimState, trace, status_before) -> S.SimState:
+    """Re-attach the trace, recording the drain's cancels post-loop."""
     if trace is not None:
+        n = st.tasks.arrival.shape[0]
         cancelled = (status_before != S.CANCELLED) & (
             st.tasks.status == S.CANCELLED)
         trace = T.record(trace, st.time, T.EV_CANCEL, jnp.arange(n), -1,
@@ -367,19 +532,28 @@ def _drain(st: S.SimState, tb: S.StaticTables, policy_id: jnp.ndarray,
 
 
 def _start_tasks(st: S.SimState, tb: S.StaticTables,
-                 up: jnp.ndarray | None = None) -> S.SimState:
+                 up: jnp.ndarray | None = None, *,
+                 pallas: bool = False) -> S.SimState:
     tasks, mach = st.tasks, st.machines
     n = tasks.arrival.shape[0]
     n_m = mach.mtype.shape[0]
     idle = mach.running < 0
     if up is not None:
         idle = idle & up
-    # (N, M) queued mask; pick the lowest mapping-seq task per idle machine
-    queued = (tasks.status == S.IN_MQ)[:, None] & (
-        tasks.machine[:, None] == jnp.arange(n_m)[None, :])
-    seqs = jnp.where(queued, tasks.seq[:, None], INT_MAX)
-    pick = jnp.argmin(seqs, axis=0).astype(jnp.int32)        # (M,)
-    has = queued.any(axis=0)
+    if pallas:
+        # segmented per-machine lowest-seq pick; the (N, M) queued mask
+        # never exists in HBM (docs/kernels.md) — integer seqs, so the
+        # kernel's jnp-argmin tie-break contract makes it bitwise exact
+        pick, has = K.fused_start_pick(tasks.status, tasks.machine,
+                                       tasks.seq, n_m, in_mq=S.IN_MQ,
+                                       interpret=K.default_interpret())
+    else:
+        # (N, M) queued mask; lowest mapping-seq task per idle machine
+        queued = (tasks.status == S.IN_MQ)[:, None] & (
+            tasks.machine[:, None] == jnp.arange(n_m)[None, :])
+        seqs = jnp.where(queued, tasks.seq[:, None], INT_MAX)
+        pick = jnp.argmin(seqs, axis=0).astype(jnp.int32)    # (M,)
+        has = queued.any(axis=0)
     start = idle & has
     if st.trace is not None:
         st = replace(st, trace=T.record(
@@ -401,12 +575,39 @@ def _start_tasks(st: S.SimState, tb: S.StaticTables,
     return replace(st, tasks=tasks, machines=mach, mq_count=mq_count)
 
 
+def sorted_transitions(dyn: S.MachineDynamics) -> jnp.ndarray:
+    """Loop-invariant availability-transition vector, +inf-terminated.
+
+    ``_next_event_time`` needs the earliest transition strictly after the
+    current time; on a sorted vector that is one ``searchsorted`` instead
+    of the ravel + concat + masked min the loop used to rebuild every
+    event.  The floats are untouched (sorting only reorders), so the
+    result is bitwise identical to the original reduction.
+    """
+    trans = jnp.sort(jnp.concatenate([dyn.down_start.ravel(),
+                                      dyn.down_end.ravel()]))
+    return jnp.concatenate([trans, jnp.full((1,), jnp.inf, jnp.float32)])
+
+
 def _next_event_time(st: S.SimState,
                      dyn: S.MachineDynamics | None = None,
-                     parents: jnp.ndarray | None = None) -> jnp.ndarray:
+                     parents: jnp.ndarray | None = None,
+                     transitions: jnp.ndarray | None = None, *,
+                     pallas: bool = False) -> jnp.ndarray:
     tasks, mach = st.tasks, st.machines
     not_arrived = tasks.status == S.NOT_ARRIVED
     if parents is None:
+        if pallas:
+            # fused single-pass arrival/deadline minima (docs/kernels.md);
+            # min is order-independent, so the kernel is bitwise exact
+            t_arr, t_dl = K.fused_event_bounds(
+                tasks.status, tasks.arrival, tasks.deadline,
+                not_arrived=S.NOT_ARRIVED, live_lo=S.IN_BATCH,
+                live_hi=S.RUNNING, interpret=K.default_interpret())
+            t_cmp = jnp.min(jnp.where(mach.running >= 0, mach.busy_until,
+                                      S.INF))
+            t = jnp.minimum(jnp.minimum(t_arr, t_cmp), t_dl)
+            return _fold_transitions(t, st, dyn, transitions)
         t_arr = jnp.min(jnp.where(not_arrived, tasks.arrival, S.INF))
     else:
         # a dependency-blocked task has no pending arrival event: its
@@ -427,14 +628,26 @@ def _next_event_time(st: S.SimState,
         tasks.status == S.RUNNING)
     t_dl = jnp.min(jnp.where(live, tasks.deadline, S.INF))
     t = jnp.minimum(jnp.minimum(t_arr, t_cmp), t_dl)
-    if dyn is not None:
-        # availability transitions are events too; strictly future ones
-        # only (a transition at the current time was already processed)
+    return _fold_transitions(t, st, dyn, transitions)
+
+
+def _fold_transitions(t, st, dyn, transitions):
+    if dyn is None:
+        return t
+    # availability transitions are events too; strictly future ones
+    # only (a transition at the current time was already processed)
+    if transitions is not None:
+        # sorted +inf-terminated vector hoisted out of the loop
+        # (``sorted_transitions``): the earliest element strictly after
+        # the current time is one searchsorted probe — the same float
+        # the masked min below would select
+        idx = jnp.searchsorted(transitions, st.time, side="right")
+        t_tr = transitions[jnp.minimum(idx, transitions.shape[0] - 1)]
+    else:
         trans = jnp.concatenate([dyn.down_start.ravel(),
                                  dyn.down_end.ravel()])
         t_tr = jnp.min(jnp.where(trans > st.time, trans, S.INF))
-        t = jnp.minimum(t, t_tr)
-    return t
+    return jnp.minimum(t, t_tr)
 
 
 # --------------------------------------------------------------------------
@@ -491,13 +704,19 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
     energy_nm = eet_nm * (tables.power[mtype, 1]
                           * st.machines.power_scale)[None, :]
     const = (eet_nm, energy_nm)
+    # loop-invariant sorted availability transitions (one searchsorted
+    # per event instead of a ravel + concat + masked min)
+    transitions = sorted_transitions(dynamics) if dynamics is not None \
+        else None
 
     def cond(st):
-        done = jnp.all(S.is_terminal(st.tasks.status))
-        return ~done & (st.n_events < max_events)
+        # incremental non-terminal population counter — the former
+        # full-status reduction ran on every loop-trip evaluation
+        return (st.n_live > 0) & (st.n_events < max_events)
 
     def body(st):
-        t = _next_event_time(st, dynamics, parents)
+        t = _next_event_time(st, dynamics, parents, transitions,
+                             pallas=params.pallas)
         st = replace(st, time=t)
         st = _completions(st, tables)
         up = None
@@ -509,7 +728,7 @@ def run_sim(tasks: S.TaskTable, mtype: jnp.ndarray, tables: S.StaticTables,
         st = _arrivals(st, params.qcap)
         st = _deadline_drops(st, tables)
         st = _drain(st, tables, policy_id, params, const, up, policy_params)
-        st = _start_tasks(st, tables, up)
+        st = _start_tasks(st, tables, up, pallas=params.pallas)
         if params.trace:
             st = replace(st, trace=T.snapshot(st.trace, st))
         if params.metrics:

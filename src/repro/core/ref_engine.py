@@ -38,6 +38,8 @@ class RefResult:
     metrics: dict | None = None             # metrics.fold_tasks_np counts
     #      dict (same schema/keys as metrics.to_numpy) when the run was
     #      instrumented — the oracle for SimParams(metrics=True)
+    n_events: int = 0                       # processed event-loop trips —
+    #      the oracle for SimState.n_events (loop-trip accounting)
 
 
 @dataclass
@@ -480,6 +482,7 @@ class _Sim:
                                 + 2 * self.down_start.shape[-1]
                                 * len(self.mtype)
                                 + (n if self.parents is not None else 0))
+        n_events = 0
         while not np.all(self.status >= S.COMPLETED) and budget > 0:
             self.stream_load()
             t = self.next_event()
@@ -503,6 +506,7 @@ class _Sim:
                 self.qdepth_counts[
                     ME.bucket_np(self.metrics_spec, depth)] += 1
             budget -= 1
+            n_events += 1
         metrics = None
         if self.metrics_spec is not None:
             metrics = ME.fold_tasks_np(
@@ -514,7 +518,7 @@ class _Sim:
                          float(max(self.t_end.max(), 0.0)),
                          self.n_preempts.copy(),
                          None if self.trace is None else list(self.trace),
-                         metrics)
+                         metrics, n_events)
 
 
 def simulate_ref(arrival, type_id, deadline, eet, power, mtype, *,

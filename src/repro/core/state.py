@@ -160,6 +160,15 @@ class SimState:
     metrics: Any = None       # metrics.SimMetrics when SimParams.metrics
     #                           is on, else None (instruments compile
     #                           out; same Python-level gate as `trace`)
+    n_batch: Any = None       # i32 () batch-queue population (status ==
+    #                           IN_BATCH) — incrementally maintained at
+    #                           every mutation point (exact int math, like
+    #                           mq_count); replaces the O(N) status scans
+    #                           in _arrivals and _drain's trip bound
+    n_live: Any = None        # i32 () non-terminal population (status <
+    #                           COMPLETED) — the event loop's `cond` reads
+    #                           this scalar instead of reducing the full
+    #                           status column every trip
 
 
 @register_pytree
@@ -239,6 +248,8 @@ def init_state(tasks: TaskTable, mtype: jnp.ndarray,
         n_preempts=jnp.zeros((n,), jnp.int32),
         mq_count=jnp.zeros((m,), jnp.int32),
         deps_left=deps_left,
+        n_batch=jnp.int32(0),
+        n_live=jnp.int32(n),
     )
 
 

@@ -82,10 +82,14 @@ class StreamParams(NamedTuple):
     max_events: int | None = None
     trace: bool = False
     trace_capacity: int | None = None
-    pallas: bool = False          # fused dispatch kernels (docs/kernels.md)
+    pallas: bool = False          # fused dispatch + event kernels
+    #                               (docs/kernels.md)
     metrics: bool = False         # in-jit histograms + SLO windows folded
     #                               into StreamAgg (docs/observability.md)
     metrics_spec: ME.MetricsSpec | None = None
+    drain_k: int = 1              # speculative drain width (the window
+    #                               runs the dense drain loop verbatim —
+    #                               docs/engine_perf.md)
 
     def sim_params(self) -> E.SimParams:
         """The dense-engine view (phases read lcap/qcap/cancel from it;
@@ -93,7 +97,7 @@ class StreamParams(NamedTuple):
         folds at retirement — so it is not forwarded here)."""
         return E.SimParams(lcap=self.lcap, qcap=self.qcap,
                            cancel_infeasible=self.cancel_infeasible,
-                           pallas=self.pallas)
+                           pallas=self.pallas, drain_k=self.drain_k)
 
 
 class TaskStream(NamedTuple):
@@ -255,7 +259,9 @@ def _refill(ws: WindowState, chunk: TaskStream,
     slot_task = jnp.where(do, chunk.gid[take], ws.slot_task)
     retired = ws.retired & ~do
     sim = replace(st, tasks=tasks,
-                  n_preempts=jnp.where(do, 0, st.n_preempts))
+                  n_preempts=jnp.where(do, 0, st.n_preempts),
+                  # revived slots rejoin the live population (exact int)
+                  n_live=st.n_live + jnp.sum(do, dtype=jnp.int32))
 
     cu, pslot = ws.children_unloaded, ws.pslot
     if pslot is not None:
@@ -338,7 +344,8 @@ def _globalize_rows(tb: T.TraceBuffer, n0: jnp.ndarray,
 def _one_event(ws: WindowState, policy_id: jnp.ndarray,
                sparams: E.SimParams,
                dynamics: S.MachineDynamics | None,
-               policy_params) -> WindowState:
+               policy_params,
+               transitions: jnp.ndarray | None = None) -> WindowState:
     """Process one event timestamp with the dense engine's six phases.
 
     Identical to ``engine.run_sim``'s loop body on (W,)-shaped state,
@@ -350,7 +357,8 @@ def _one_event(ws: WindowState, policy_id: jnp.ndarray,
     """
     st = ws.sim
     w = ws.slot_task.shape[0]
-    t = jnp.maximum(E._next_event_time(st, dynamics, ws.pslot), st.time)
+    t = jnp.maximum(E._next_event_time(st, dynamics, ws.pslot, transitions,
+                                       pallas=sparams.pallas), st.time)
     st = replace(st, time=t)
     n0 = None if st.trace is None else st.trace.n_rows
     st = E._completions(st, ws.wtab)
@@ -369,7 +377,7 @@ def _one_event(ws: WindowState, policy_id: jnp.ndarray,
                           * st.machines.power_scale)[None, :]
     st = E._drain(st, ws.wtab, policy_id, sparams, (eet_nm, energy_nm),
                   up, policy_params)
-    st = E._start_tasks(st, ws.wtab, up)
+    st = E._start_tasks(st, ws.wtab, up, pallas=sparams.pallas)
     if st.trace is not None:
         tb = _globalize_rows(st.trace, n0, ws.slot_task)
         run_g = jnp.where(st.machines.running >= 0,
@@ -434,8 +442,9 @@ def run_stream(stream: TaskStream, mtype: jnp.ndarray, eet: jnp.ndarray,
         t_end=jnp.full((w,), -1.0, jnp.float32),
     )
     sim = S.init_state(tasks0, mtype, dynamics, parents=None)
-    # every slot starts retired-terminal (inert to all phases)
-    sim = replace(sim, tasks=tasks0)
+    # every slot starts retired-terminal (inert to all phases); the live
+    # counter starts at zero accordingly (_refill revives slots)
+    sim = replace(sim, tasks=tasks0, n_live=jnp.int32(0))
     if has_deps:
         sim = replace(sim, deps_left=jnp.zeros((w,), jnp.int32))
     if params.trace:
@@ -465,9 +474,12 @@ def run_stream(stream: TaskStream, mtype: jnp.ndarray, eet: jnp.ndarray,
             metrics=ME.init(params.metrics_spec)))
     policy_id = jnp.asarray(policy_id, jnp.int32)
     sparams = params.sim_params()
+    transitions = E.sorted_transitions(dynamics) \
+        if dynamics is not None else None
 
     def event(ws):
-        return _one_event(ws, policy_id, sparams, dynamics, policy_params)
+        return _one_event(ws, policy_id, sparams, dynamics, policy_params,
+                          transitions)
 
     def chunk_step(ws, chunk):
         n_valid = jnp.sum(chunk.gid >= 0).astype(jnp.int32)
@@ -493,8 +505,8 @@ def run_stream(stream: TaskStream, mtype: jnp.ndarray, eet: jnp.ndarray,
     ws, _ = jax.lax.scan(chunk_step, ws, stream)
 
     def drain_cond(ws):
-        live = ~jnp.all(S.is_terminal(ws.sim.tasks.status))
-        return live & (ws.sim.n_events < max_events)
+        # incremental non-terminal counter (bitwise the status reduction)
+        return (ws.sim.n_live > 0) & (ws.sim.n_events < max_events)
 
     ws = jax.lax.while_loop(drain_cond, event, ws)
     return _retire(ws)

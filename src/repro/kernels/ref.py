@@ -74,6 +74,33 @@ def fused_maxmin_ref(avail, in_batch, room, type_id, eet_m):
             jnp.where(found, score[t], -BIG))
 
 
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def fused_start_pick_ref(status, machine, seq, n_machines, *, in_mq=2):
+    """Per-machine FIFO head via the materialized (N, M) path: build the
+    queued membership mask, mask seqs with INT_MAX, column argmin (first
+    row on ties — lowest task id), plus the any-queued flag.  This is
+    verbatim the engine's pre-kernel ``_start_tasks`` reduction."""
+    queued = (status == in_mq)[:, None] & (
+        machine[:, None] == jnp.arange(n_machines)[None, :])
+    seqs = jnp.where(queued, seq[:, None], INT_MAX)
+    return (jnp.argmin(seqs, axis=0).astype(jnp.int32),
+            queued.any(axis=0))
+
+
+def fused_event_bounds_ref(status, arrival, deadline, *, not_arrived=0,
+                           live_lo=1, live_hi=3):
+    """Next-event arrival/deadline minima via two masked ``jnp.min``
+    reductions (the engine's pre-kernel ``_next_event_time`` shape);
+    empty masks give +inf."""
+    inf = jnp.float32(jnp.inf)
+    t_arr = jnp.min(jnp.where(status == not_arrived, arrival, inf))
+    live = (status >= live_lo) & (status <= live_hi)
+    t_dl = jnp.min(jnp.where(live, deadline, inf))
+    return t_arr, t_dl
+
+
 def grouped_matmul_ref(lhs, rhs, group_sizes):
     """lhs (G, C, D) x rhs (G, D, F) with only the first group_sizes[g]
     rows of each group valid -> (G, C, F); invalid rows are zero."""

@@ -262,6 +262,168 @@ def fused_minmin(avail: jnp.ndarray, in_batch: jnp.ndarray,
     return idx[0], vmin[0]
 
 
+INT_MAX = 2**31 - 1   # python int, same reason as BIG
+INF = float("inf")
+
+
+# --------------------------------------------------------------------------
+# fused event-loop kernels: start-pick and next-event reductions
+# --------------------------------------------------------------------------
+def _start_pick_kernel(status_ref, machine_ref, seq_ref, pick_out, has_out,
+                       best_scr, task_scr, any_scr, *,
+                       bn: int, m: int, n_blocks: int, in_mq: int):
+    """Segmented per-machine lowest-seq pick for ``engine._start_tasks``.
+
+    Each grid step builds one (bn, m) membership tile in-register — the
+    (N, M) queued mask never exists in HBM — and folds its column minima
+    into the (m,)-sized running (best seq, task id, any) carried across
+    blocks.  Tie-breaking matches ``jnp.argmin(seqs, axis=0)`` exactly:
+    within a block argmin takes the first row, across blocks only a
+    strict improvement replaces the incumbent, so the lowest task id
+    among equal seqs (including the all-INT_MAX empty column) wins.
+    """
+    i = pl.program_id(0)
+    st = status_ref[...]                                     # (bn,) i32
+    mc = machine_ref[...]
+    sq = seq_ref[...]
+    mcol = jax.lax.broadcasted_iota(jnp.int32, (bn, m), 1)
+    valid = (st == in_mq)[:, None] & (mc[:, None] == mcol)
+    seqs = jnp.where(valid, sq[:, None], INT_MAX)            # (bn, m)
+    bmin = jnp.min(seqs, axis=0)                             # (m,)
+    btask = (i * bn + jnp.argmin(seqs, axis=0)).astype(jnp.int32)
+    bany = valid.any(axis=0).astype(jnp.int32)
+
+    @pl.when(i == 0)
+    def _init():
+        best_scr[...] = bmin
+        task_scr[...] = btask
+        any_scr[...] = bany
+
+    @pl.when(i > 0)
+    def _merge():
+        imp = bmin < best_scr[...]
+        best_scr[...] = jnp.where(imp, bmin, best_scr[...])
+        task_scr[...] = jnp.where(imp, btask, task_scr[...])
+        any_scr[...] = any_scr[...] | bany
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        pick_out[...] = task_scr[...]
+        has_out[...] = any_scr[...]
+
+
+def fused_start_pick(status: jnp.ndarray, machine: jnp.ndarray,
+                     seq: jnp.ndarray, n_machines: int, *,
+                     in_mq: int = 2, block_n: int = 256,
+                     interpret: bool = False):
+    """Per-machine FIFO head -> (pick (M,) i32, has (M,) bool).
+
+    Identical (index and flag) to the engine's materialized path:
+    ``argmin(where(queued, seq[:, None], INT_MAX), axis=0)`` plus
+    ``queued.any(axis=0)`` where ``queued = (status == IN_MQ) &
+    (machine == arange(M))`` — integer seqs, so equality is exact.
+    """
+    n = status.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        status = jnp.pad(status, (0, pad), constant_values=-1)
+        machine = jnp.pad(machine, (0, pad), constant_values=-1)
+        seq = jnp.pad(seq, (0, pad), constant_values=INT_MAX)
+    n_blocks = (n + pad) // bn
+    kernel = functools.partial(_start_pick_kernel, bn=bn, m=n_machines,
+                               n_blocks=n_blocks, in_mq=in_mq)
+    pick, has = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((n_machines,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_machines,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((n_machines,), jnp.int32),
+                        pltpu.SMEM((n_machines,), jnp.int32),
+                        pltpu.SMEM((n_machines,), jnp.int32)],
+        interpret=interpret,
+    )(status, machine, seq)
+    return pick, has > 0
+
+
+def _event_bounds_kernel(status_ref, arrival_ref, deadline_ref,
+                         arr_out, dl_out, scr, *,
+                         n_blocks: int, not_arrived: int,
+                         live_lo: int, live_hi: int):
+    """Fused next-event reduction: one pass over the task table computes
+    the pending-arrival minimum (status == NOT_ARRIVED) and the live-
+    deadline minimum (IN_BATCH/IN_MQ/RUNNING, a contiguous status range)
+    together.  ``min`` is exact and order-independent, so the result is
+    bitwise identical to the two separate ``jnp.min(where(...))``
+    reductions it replaces."""
+    i = pl.program_id(0)
+    st = status_ref[...]
+    a = jnp.min(jnp.where(st == not_arrived, arrival_ref[...], INF))
+    d = jnp.min(jnp.where((st >= live_lo) & (st <= live_hi),
+                          deadline_ref[...], INF))
+
+    @pl.when(i == 0)
+    def _init():
+        scr[0] = a
+        scr[1] = d
+
+    @pl.when(i > 0)
+    def _merge():
+        scr[0] = jnp.minimum(scr[0], a)
+        scr[1] = jnp.minimum(scr[1], d)
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        arr_out[0] = scr[0]
+        dl_out[0] = scr[1]
+
+
+def fused_event_bounds(status: jnp.ndarray, arrival: jnp.ndarray,
+                       deadline: jnp.ndarray, *, not_arrived: int = 0,
+                       live_lo: int = 1, live_hi: int = 3,
+                       block_n: int = 256, interpret: bool = False):
+    """Next-event candidates -> (t_arr f32 (), t_dl f32 ()).
+
+    Bitwise equal to ``jnp.min(where(status == NOT_ARRIVED, arrival,
+    inf))`` and ``jnp.min(where(live, deadline, inf))`` with ``live``
+    the IN_BATCH..RUNNING status range; empty masks return +inf.
+    """
+    n = status.shape[0]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        status = jnp.pad(status, (0, pad), constant_values=-1)
+        arrival = jnp.pad(arrival, (0, pad))
+        deadline = jnp.pad(deadline, (0, pad))
+    n_blocks = (n + pad) // bn
+    kernel = functools.partial(_event_bounds_kernel, n_blocks=n_blocks,
+                               not_arrived=not_arrived, live_lo=live_lo,
+                               live_hi=live_hi)
+    t_arr, t_dl = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        interpret=interpret,
+    )(status, arrival, deadline)
+    return t_arr[0], t_dl[0]
+
+
 def fused_maxmin(avail: jnp.ndarray, in_batch: jnp.ndarray,
                  room: jnp.ndarray, type_id: jnp.ndarray,
                  eet_m: jnp.ndarray, *, block_n: int = 256,

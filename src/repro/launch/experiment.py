@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 from dataclasses import dataclass, field
 from typing import Any, NamedTuple
 
@@ -566,6 +567,37 @@ _EXEC_CACHE: dict[E.SimParams, Any] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0, "retraces": 0}
 
 
+def persistent_cache_dir() -> str | None:
+    """The configured ``jax_compilation_cache_dir`` (None = disabled)."""
+    try:
+        return jax.config.jax_compilation_cache_dir
+    except AttributeError:
+        return None
+
+
+def enable_compilation_cache(path: str | None = None) -> str | None:
+    """Turn on jax's persistent compilation cache under ``results/``.
+
+    Compiled executables (every ``compile_sweep`` specialization, the
+    streaming twin, the chunked driver) are serialized to disk and
+    reloaded by later *processes*: a bench re-run or CI shard pays jax's
+    trace time but skips the XLA compile — the cold-vs-warm compile
+    times land as telemetry span attrs (docs/experiments.md §Compilation
+    cache).  Returns the cache directory, or None when the knob is
+    unavailable on this jax build (the engine runs unchanged).
+    """
+    path = path or os.path.join("results", "jax_cache")
+    try:
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", path)
+        # cache every entry: the sweeps worth caching are small but many
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except Exception:
+        return None
+    return path
+
+
 def _count_retrace(vf):
     """Wrap a vmapped sweep so every *trace* of the jitted callable bumps
     ``_CACHE_STATS["retraces"]`` — the body only runs at trace time, so
@@ -601,6 +633,8 @@ def compile_sweep(params: E.SimParams = E.SimParams()):
         _CACHE_STATS["hits"] += 1
         return fn
     _CACHE_STATS["misses"] += 1
+    TL.event("compile_sweep_miss", params=str(params),
+             persistent_cache_dir=persistent_cache_dir())
 
     def one(tasks, mtype, tables, pid, dyn, par, pp):
         st = E.run_sim(tasks, mtype, tables, pid, params, dyn, pp, par)
@@ -800,6 +834,7 @@ def run_experiment(spec: ExperimentSpec, *, mesh=None, policy_params=None,
         with TL.span("compile") as csp:
             fn = compile_experiment(spec)
             csp.update(cache_stats())
+            csp["persistent_cache_dir"] = persistent_cache_dir()
         if mesh is not None:
             from repro.launch.mesh import mesh_device_count, replica_sharding
             n_dev = mesh_device_count(mesh)
